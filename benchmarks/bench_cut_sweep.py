@@ -1,0 +1,42 @@
+"""Cut-value optimization (paper §II: "cut values c_i can be selected so as
+to optimize performance with respect to particular applications").
+
+Sweeps the layer-0 cut c0 with fixed deeper layers and measures ingest
+rate: too-small c0 spills constantly (slow-memory traffic), too-large c0
+makes every fast-layer merge expensive.  The optimum in between is the
+paper's tuning claim, reproduced.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import Report, timeit
+from repro.core import hier, stream
+from repro.data.powerlaw import rmat_stream
+
+
+def main(report: Report | None = None):
+    report = report or Report()
+    block, blocks = 1024, 16
+    key = jax.random.PRNGKey(0)
+    rows, cols, vals = rmat_stream(key, blocks, block, scale=18)
+    run = jax.jit(lambda h, r, c, v: stream.ingest(h, r, c, v)[0])
+
+    best = (None, 0.0)
+    for c0 in (1024, 2048, 4096, 8192, 16384, 32768):
+        cuts = (c0, 131072, 1048576)
+        h0 = hier.create(cuts, block)
+        sec = timeit(run, h0, rows, cols, vals, warmup=1, iters=3)
+        rate = blocks * block / sec
+        if rate > best[1]:
+            best = (c0, rate)
+        report.add(f"cut_sweep_c0={c0}", sec / blocks, f"{rate:,.0f} upd/s")
+    report.add("cut_sweep_best", 0.0,
+               f"c0={best[0]} @ {best[1]:,.0f} upd/s")
+    return dict(best_c0=best[0], best_rate=best[1])
+
+
+if __name__ == "__main__":
+    r = Report()
+    r.header()
+    main(r)

@@ -1,0 +1,70 @@
+"""Per-kernel timings: Pallas (interpret on CPU) sanity + XLA reference.
+
+On this CPU container the Pallas kernels run in interpret mode (Python
+loop semantics), so absolute Pallas numbers are NOT meaningful — the
+reported derived value is the XLA reference path's throughput, plus an
+allclose check that the kernel agrees with ref at benchmark shapes.  Real
+kernel perf comes from the TPU run; correctness sweeps live in tests/.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Report, timeit
+
+
+def main(report: Report | None = None):
+    report = report or Report()
+    key = jax.random.PRNGKey(0)
+
+    # --- hier_merge: canonical segment merge -------------------------------
+    from repro.core import assoc
+    n = 8192
+    r1, c1 = jax.random.randint(key, (2, n), 0, 1 << 20)
+    seg_a, _ = assoc.from_coo(r1, c1, jnp.ones((n,)), n)
+    r2, c2 = jax.random.randint(jax.random.fold_in(key, 1), (2, n), 0,
+                                1 << 20)
+    seg_b, _ = assoc.from_coo(r2, c2, jnp.ones((n,)), n)
+    merge_ref = jax.jit(lambda a, b: assoc.merge(a, b, 2 * n)[0].val)
+    sec = timeit(merge_ref, seg_a, seg_b)
+    report.add("hier_merge_xla_ref", sec, f"{2*n/sec:,.0f} entries/s")
+    out_k = assoc.merge_kernel(seg_a, seg_b, 2 * n)[0]
+    out_r = assoc.merge(seg_a, seg_b, 2 * n)[0]
+    ok = (np.array_equal(np.asarray(out_k.hi), np.asarray(out_r.hi)) and
+          np.allclose(np.asarray(out_k.val), np.asarray(out_r.val)))
+    report.add("hier_merge_kernel_allclose", 0.0, f"match={ok}")
+
+    # --- segment_agg: GNN message reduction --------------------------------
+    e, d, nseg = 65536, 64, 4096
+    msgs = jax.random.normal(key, (e, d))
+    segs = jax.random.randint(key, (e,), 0, nseg)
+    ref = jax.jit(lambda m, s: jax.ops.segment_sum(m, s, num_segments=nseg))
+    sec = timeit(ref, msgs, segs)
+    report.add("segment_agg_xla_ref", sec, f"{e/sec:,.0f} edges/s")
+    from repro.kernels.segment_agg import ops as seg_ops
+    out_k = seg_ops.segment_sum(msgs, segs, num_segments=nseg)
+    ok = np.allclose(np.asarray(out_k), np.asarray(ref(msgs, segs)),
+                     rtol=1e-5, atol=1e-5)
+    report.add("segment_agg_kernel_allclose", 0.0, f"match={ok}")
+
+    # --- embedding_bag: recsys lookup-reduce --------------------------------
+    rows, dim, bags, bag = 1 << 18, 16, 8192, 4
+    table = jax.random.normal(key, (rows, dim))
+    idx = jax.random.randint(key, (bags, bag), 0, rows)
+    ref = jax.jit(lambda t, i: jnp.sum(jnp.take(t, i, axis=0), axis=1))
+    sec = timeit(ref, table, idx)
+    report.add("embedding_bag_xla_ref", sec, f"{bags/sec:,.0f} bags/s")
+    from repro.kernels.embedding_bag import ops as eb_ops
+    out_k = eb_ops.embedding_bag(table, idx)
+    ok = np.allclose(np.asarray(out_k), np.asarray(ref(table, idx)),
+                     rtol=1e-5, atol=1e-5)
+    report.add("embedding_bag_kernel_allclose", 0.0, f"match={ok}")
+    return {}
+
+
+if __name__ == "__main__":
+    r = Report()
+    r.header()
+    main(r)

@@ -1,0 +1,54 @@
+"""Paper core claim: hierarchical vs flat associative-array update rate.
+
+The paper's Fig 2 argument: without the hierarchy every block update merges
+into the (large) full array; with it, most updates touch only the small
+fast layer.  We measure single-instance sustained updates/s for
+  * flat      — one layer sized like the hierarchy's deepest layer,
+  * hier      — the layered structure with geometric cuts,
+at the paper's workload shape (power-law R-MAT blocks, lax.scan ingest).
+
+Derived column: updates/s and the hier/flat speedup (the reproduction
+analogue of the paper's "hierarchical arrays dramatically reduce the
+number of updates to slow memory").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Report, timeit
+from repro.core import hier, stream
+from repro.data.powerlaw import rmat_stream
+
+
+def ingest_rate(cuts, block_size, n_blocks, scale=18, seed=0):
+    key = jax.random.PRNGKey(seed)
+    rows, cols, vals = rmat_stream(key, n_blocks, block_size, scale)
+    h0 = hier.create(cuts, block_size)
+    run = jax.jit(lambda h, r, c, v: stream.ingest(h, r, c, v)[0])
+    sec = timeit(run, h0, rows, cols, vals, warmup=1, iters=3)
+    return sec, n_blocks * block_size / sec
+
+
+def main(report: Report | None = None):
+    report = report or Report()
+    block, blocks = 4096, 32
+    cuts = (8192, 65536, 524288)
+    flat_cuts = (cuts[-1],)          # single large layer
+
+    sec_h, rate_h = ingest_rate(cuts, block, blocks)
+    sec_f, rate_f = ingest_rate(flat_cuts, block, blocks)
+    report.add("update_rate_hier", sec_h / blocks,
+               f"{rate_h:,.0f} upd/s")
+    report.add("update_rate_flat", sec_f / blocks,
+               f"{rate_f:,.0f} upd/s")
+    report.add("update_rate_speedup", 0.0,
+               f"hier/flat = {rate_h / rate_f:.2f}x")
+    return dict(rate_hier=rate_h, rate_flat=rate_f,
+                speedup=rate_h / rate_f)
+
+
+if __name__ == "__main__":
+    r = Report()
+    r.header()
+    main(r)

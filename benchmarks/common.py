@@ -1,0 +1,33 @@
+"""Shared benchmark timing utilities."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def timeit(fn, *args, warmup: int = 2, iters: int = 5):
+    """Median wall time of fn(*args) in seconds (block_until_ready'd)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+class Report:
+    """Collects (name, us_per_call, derived) rows; prints CSV."""
+
+    def __init__(self):
+        self.rows = []
+
+    def add(self, name: str, seconds: float, derived: str = ""):
+        self.rows.append((name, seconds * 1e6, derived))
+        print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+
+    def header(self):
+        print("name,us_per_call,derived", flush=True)

@@ -1,0 +1,97 @@
+"""Roofline table from the dry-run result JSONs (results/dryrun/).
+
+Emits the EXPERIMENTS.md §Roofline markdown table: per (arch x shape x
+mesh) the three terms in seconds, the dominant bottleneck, MODEL_FLOPS /
+HLO_FLOPs, and the HBM fit.  Run after launch/dryrun.py --all.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from repro.roofline.terms import HW_V5E
+
+RESULTS = "results/dryrun"
+
+
+def load_cells(mesh: str) -> List[Dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(RESULTS, mesh, "*.json"))):
+        with open(f) as fh:
+            out.append(json.load(fh))
+    return out
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.0f}us"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def markdown_table(mesh: str, baseline_only: bool = True) -> str:
+    rows = ["| arch | shape | compute | memory | collective | bound | "
+            "useful (6ND/HLO) | fits 16GiB |",
+            "|---|---|---|---|---|---|---|---|"]
+    for rec in load_cells(mesh):
+        if baseline_only and rec.get("variant", "baseline") != "baseline":
+            continue
+        tag = f"| {rec['arch']} | {rec['shape']} |"
+        if rec["status"] == "skip":
+            rows.append(f"{tag} — | — | — | SKIP (full attention @500k) "
+                        f"| — | — |")
+            continue
+        if rec["status"] != "ok":
+            rows.append(f"{tag} — | — | — | ERROR | — | — |")
+            continue
+        r = rec["roofline"]
+        rows.append(
+            f"{tag} {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} | "
+            f"{fmt_s(r['collective_s'])} | {r['dominant']} | "
+            f"{rec.get('useful_fraction', 0):.3f} | "
+            f"{rec.get('fits_hbm')} |")
+    return "\n".join(rows)
+
+
+def summarize(mesh: str = "single") -> Dict:
+    cells = [c for c in load_cells(mesh)
+             if c.get("variant", "baseline") == "baseline"]
+    ok = [c for c in cells if c["status"] == "ok"]
+    skip = [c for c in cells if c["status"] == "skip"]
+    err = [c for c in cells if c["status"] == "error"]
+    worst = sorted(
+        (c for c in ok if c.get("useful_fraction")),
+        key=lambda c: c["useful_fraction"])
+    coll_bound = [c for c in ok
+                  if c["roofline"]["dominant"] == "collective"]
+    return dict(n_ok=len(ok), n_skip=len(skip), n_err=len(err),
+                errors=[(c["arch"], c["shape"]) for c in err],
+                worst_useful=[(c["arch"], c["shape"],
+                               round(c["useful_fraction"], 4))
+                              for c in worst[:5]],
+                collective_bound=[(c["arch"], c["shape"])
+                                  for c in coll_bound])
+
+
+def main(report=None):
+    for mesh in ("single", "multi"):
+        if not os.path.isdir(os.path.join(RESULTS, mesh)):
+            continue
+        s = summarize(mesh)
+        line = (f"{mesh}: ok={s['n_ok']} skip={s['n_skip']} "
+                f"err={s['n_err']}")
+        if report is not None:
+            report.add(f"roofline_{mesh}_cells", 0.0, line)
+        else:
+            print(line)
+            print(markdown_table(mesh))
+    return {}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Benchmark driver: one benchmark per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  * bench_update_rate — Fig 2 claim: hierarchical vs flat update rate
+  * bench_scaling     — Fig 3: aggregate rate vs instance count (+34k proj)
+  * bench_cut_sweep   — §II: cut-value tuning curve
+  * bench_kernels     — Pallas kernels vs XLA reference (allclose + rate)
+  * roofline          — dry-run cell summary (if results/dryrun exists)
+"""
+from __future__ import annotations
+
+import traceback
+
+from benchmarks.common import Report
+
+
+def main() -> None:
+    report = Report()
+    report.header()
+    from benchmarks import (bench_cut_sweep, bench_kernels,
+                            bench_scaling, bench_update_rate, roofline)
+    for mod in (bench_update_rate, bench_scaling, bench_cut_sweep,
+                bench_kernels, roofline):
+        try:
+            mod.main(report)
+        except Exception as e:          # report, keep going
+            report.add(f"{mod.__name__}_ERROR", 0.0,
+                       f"{type(e).__name__}: {e}")
+            traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""End-to-end driver: the paper's §III experiment at container scale.
+
+    PYTHONPATH=src python examples/stream_ingest.py
+
+Multiple independent hierarchical D4M instances each ingest their own
+power-law (R-MAT) edge stream — "thousands of processors each creating
+many different graphs of 100,000,000 edges each" — with zero cross-
+instance traffic on the update path.  Reports sustained updates/s,
+checkpoint/restart, and a global degree-histogram query (the analytics
+side of the paper's pipeline).
+"""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.ingest import run
+from repro.core import distributed
+from repro.data.powerlaw import degree_tail_exponent
+
+
+class Args:
+    instances = 8
+    blocks = 32
+    block_size = 4096
+    rounds = 4
+    cuts = "4096,32768,262144"
+    scale = 18
+    seed = 0
+    ckpt_every = 2
+    resume = False
+    verbose = True
+    ckpt_dir = ""
+
+
+def main():
+    with tempfile.TemporaryDirectory() as d:
+        args = Args()
+        args.ckpt_dir = os.path.join(d, "ckpt")
+        out = run(args)
+        print(f"\nsustained: {out['updates_per_s']:,.0f} updates/s "
+              f"across {args.instances} instances")
+        print(f"fraction of blocks that never left layer 0: "
+              f"{out['frac_blocks_layer0']:.2%}")
+        print(f"updates counted: {out['n_updates_counter']:,} "
+              f"(overflow={out['overflow']})")
+
+        # restart from the checkpoint and continue (fault-tolerance path)
+        args.resume = True
+        args.rounds = 6
+        out2 = run(args)
+        print(f"\nafter restart+continue: counter="
+              f"{out2['n_updates_counter']:,}")
+
+    # analytics: global degree histogram over all instances (query path)
+    mesh = jax.sharding.Mesh(jax.devices(), ("data",))
+    states = distributed.create_instances(4, (1024, 8192), 512)
+    from repro.data.powerlaw import instance_streams
+    from repro.core import stream
+    rows, cols, vals = instance_streams(jax.random.PRNGKey(1), 4, 16, 512,
+                                        scale=16)
+    states, _ = jax.jit(stream.ingest_instances)(states, rows, cols, vals)
+    hist_fn = distributed.global_degree_histogram_fn(
+        mesh, ("data",), num_rows=1 << 16, num_bins=16)
+    hist = hist_fn(states)
+    print("\nglobal out-degree histogram (log2 bins):", hist)
+    # power-law check: tail exponent of the merged degree distribution
+    from repro.core import hier as hier_mod, assoc
+    merged = hier_mod.query_all(jax.tree.map(lambda x: x[0], states))
+    deg = assoc.reduce_rows(merged, 1 << 16)
+    print(f"degree-tail exponent ~ {degree_tail_exponent(deg):.2f} "
+          f"(power-law graph confirmed)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Checkpointing: chunked npy + manifest, atomic, async, reshard-on-restore."""
+from repro.checkpoint.ckpt import (  # noqa: F401
+    AsyncCheckpointer, latest_step, restore, save,
+)

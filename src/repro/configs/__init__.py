@@ -1,0 +1,8 @@
+"""Assigned-architecture configs + registry."""
+from repro.configs.base import (  # noqa: F401
+    D4M_SHAPES, GNN_SHAPES, LM_SHAPES, RECSYS_SHAPES, SHAPES_BY_FAMILY,
+    D4MConfig, GNNConfig, LMConfig, RecsysConfig,
+)
+from repro.configs.registry import (  # noqa: F401
+    ARCHS, family, get_config, get_smoke_config, list_archs,
+)

@@ -1,0 +1,52 @@
+"""Arch registry: ``--arch <id>`` -> config module.
+
+Every assigned architecture (plus the paper's own d4m-stream workload) is a
+module exposing ``config()`` (the exact assigned/full-size config) and
+``smoke_config()`` (a reduced same-family config for CPU tests).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import List
+
+ARCHS = {
+    # LM family (5)
+    "deepseek-v2-236b":     ("lm", "repro.configs.deepseek_v2_236b"),
+    "granite-moe-3b-a800m": ("lm", "repro.configs.granite_moe_3b_a800m"),
+    "mistral-nemo-12b":     ("lm", "repro.configs.mistral_nemo_12b"),
+    "phi3-mini-3.8b":       ("lm", "repro.configs.phi3_mini_3_8b"),
+    "smollm-360m":          ("lm", "repro.configs.smollm_360m"),
+    # GNN family (4)
+    "gat-cora":             ("gnn", "repro.configs.gat_cora"),
+    "gin-tu":               ("gnn", "repro.configs.gin_tu"),
+    "graphcast":            ("gnn", "repro.configs.graphcast"),
+    "gatedgcn":             ("gnn", "repro.configs.gatedgcn"),
+    # RecSys (1)
+    "dcn-v2":               ("recsys", "repro.configs.dcn_v2"),
+    # the paper's workload
+    "d4m-stream":           ("d4m", "repro.configs.d4m_stream"),
+}
+
+
+def family(arch: str) -> str:
+    return ARCHS[arch][0]
+
+
+def _module(arch: str):
+    try:
+        fam, mod = ARCHS[arch]
+    except KeyError:
+        raise ValueError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
+    return importlib.import_module(mod)
+
+
+def get_config(arch: str):
+    return _module(arch).config()
+
+
+def get_smoke_config(arch: str):
+    return _module(arch).smoke_config()
+
+
+def list_archs(fam: str | None = None) -> List[str]:
+    return [a for a, (f, _) in ARCHS.items() if fam is None or f == fam]

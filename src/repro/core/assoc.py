@@ -1,0 +1,247 @@
+"""Static-capacity associative-array segments (sorted COO) — paper §II.
+
+A D4M associative array maps (row, col) string/int keys to semiring values.
+Under jit every shape must be static, so an array is stored as a *segment*:
+
+    hi : int32[C]   row keys   (lexicographic major)
+    lo : int32[C]   col keys   (lexicographic minor)
+    val: V[C]       semiring values
+    nnz: int32      live-entry count
+
+Entries [0, nnz) are sorted by (hi, lo) and unique; slots [nnz, C) hold the
+SENTINEL key and the semiring zero.  This invariant ("canonical form") lets
+merges concatenate raw buffers without masking.
+
+All ops are pure, jit-safe and vmap-safe (instances dimension), matching the
+paper's share-nothing multi-instance design.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import semiring as sr_mod
+from repro.core.semiring import Semiring
+
+Array = jax.Array
+
+# Largest int32 — real keys must be strictly smaller.
+SENTINEL = jnp.iinfo(jnp.int32).max
+
+# Sort strategy for canonicalization.  The paper's merge hot path is
+# dominated by the sort.  ``lexsort`` returns a permutation which we then
+# apply with three separate gathers; ``lax.sort`` with num_keys=2 CO-SORTS
+# the value payload inside the one variadic sort — no gather passes.
+# Measured on the d4m ingest probes (EXPERIMENTS.md §Perf, hillclimb 3).
+CO_SORT = True
+
+
+def _sorted_by_key(hi: "Array", lo: "Array", val: "Array"):
+    if CO_SORT:
+        return jax.lax.sort((hi, lo, val), num_keys=2)
+    order = jnp.lexsort((lo, hi))
+    return hi[order], lo[order], val[order]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class AssocSegment:
+    """One canonical-form associative array segment."""
+
+    hi: Array
+    lo: Array
+    val: Array
+    nnz: Array
+
+    @property
+    def capacity(self) -> int:
+        return self.hi.shape[-1]
+
+    @property
+    def dtype(self):
+        return self.val.dtype
+
+
+def empty(capacity: int, dtype=jnp.float32,
+          sr: Semiring = sr_mod.PLUS_TIMES) -> AssocSegment:
+    zero = sr_mod.integer_zero(sr, dtype)
+    return AssocSegment(
+        hi=jnp.full((capacity,), SENTINEL, jnp.int32),
+        lo=jnp.full((capacity,), SENTINEL, jnp.int32),
+        val=jnp.full((capacity,), zero, dtype),
+        nnz=jnp.zeros((), jnp.int32),
+    )
+
+
+def _canonicalize(hi: Array, lo: Array, val: Array, out_capacity: int,
+                  sr: Semiring) -> Tuple[AssocSegment, Array]:
+    """Sort by (hi, lo), combine duplicate keys with sr.add, compact, pad.
+
+    Inputs may contain SENTINEL entries (ignored).  Returns the canonical
+    segment of the requested capacity plus an ``overflow`` count of unique
+    entries dropped because they exceeded out_capacity (largest keys drop
+    first, preserving the sorted prefix).
+    """
+    n = hi.shape[-1]
+    hi_s, lo_s, val_s = _sorted_by_key(hi, lo, val)
+
+    prev_same = jnp.concatenate([
+        jnp.zeros((1,), bool),
+        (hi_s[1:] == hi_s[:-1]) & (lo_s[1:] == lo_s[:-1]),
+    ])
+    first = ~prev_same
+    seg_id = jnp.cumsum(first) - 1                       # run index per slot
+    combined = sr.segment_add(val_s, seg_id, n, sorted=True)  # [n]
+
+    valid = hi_s != SENTINEL
+    n_unique = jnp.sum(first & valid).astype(jnp.int32)
+
+    # Scatter each run's key to its run slot.  Duplicate writes within a run
+    # carry identical key values, so write order is immaterial.
+    out_hi = jnp.full((n,), SENTINEL, jnp.int32).at[seg_id].set(hi_s)
+    out_lo = jnp.full((n,), SENTINEL, jnp.int32).at[seg_id].set(lo_s)
+
+    zero = sr_mod.integer_zero(sr, val.dtype)
+    slot = jnp.arange(n)
+    live = slot < n_unique
+    out_hi = jnp.where(live, out_hi, SENTINEL)
+    out_lo = jnp.where(live, out_lo, SENTINEL)
+    out_val = jnp.where(live, combined.astype(val.dtype), zero)
+
+    if out_capacity >= n:
+        pad = out_capacity - n
+        out_hi = jnp.concatenate([out_hi, jnp.full((pad,), SENTINEL, jnp.int32)])
+        out_lo = jnp.concatenate([out_lo, jnp.full((pad,), SENTINEL, jnp.int32)])
+        out_val = jnp.concatenate([out_val, jnp.full((pad,), zero, val.dtype)])
+        overflow = jnp.zeros((), jnp.int32)
+    else:
+        out_hi = out_hi[:out_capacity]
+        out_lo = out_lo[:out_capacity]
+        out_val = out_val[:out_capacity]
+        overflow = jnp.maximum(n_unique - out_capacity, 0).astype(jnp.int32)
+
+    nnz = jnp.minimum(n_unique, out_capacity).astype(jnp.int32)
+    return AssocSegment(out_hi, out_lo, out_val, nnz), overflow
+
+
+def from_coo(rows: Array, cols: Array, vals: Array, capacity: int,
+             sr: Semiring = sr_mod.PLUS_TIMES,
+             mask: Array | None = None) -> Tuple[AssocSegment, Array]:
+    """Build a canonical segment from an (unsorted, possibly duplicated) block."""
+    rows = rows.astype(jnp.int32)
+    cols = cols.astype(jnp.int32)
+    if mask is not None:
+        zero = sr_mod.integer_zero(sr, vals.dtype)
+        rows = jnp.where(mask, rows, SENTINEL)
+        cols = jnp.where(mask, cols, SENTINEL)
+        vals = jnp.where(mask, vals, zero)
+    return _canonicalize(rows, cols, vals, capacity, sr)
+
+
+def merge(a: AssocSegment, b: AssocSegment, out_capacity: int,
+          sr: Semiring = sr_mod.PLUS_TIMES) -> Tuple[AssocSegment, Array]:
+    """a (+) b under the semiring, into a segment of out_capacity."""
+    hi = jnp.concatenate([a.hi, b.hi])
+    lo = jnp.concatenate([a.lo, b.lo])
+    val = jnp.concatenate([a.val, b.val.astype(a.val.dtype)])
+    return _canonicalize(hi, lo, val, out_capacity, sr)
+
+
+def merge_kernel(a: AssocSegment, b: AssocSegment, out_capacity: int,
+                 sr: Semiring = sr_mod.PLUS_TIMES
+                 ) -> Tuple[AssocSegment, Array]:
+    """Kernel-backed merge: Pallas sorting-network path (VMEM-resident on
+    TPU, interpret mode on CPU).  Falls back to the XLA-sort path above the
+    kernel capacity ceiling."""
+    from repro.kernels.hier_merge import ops as hm_ops
+
+    total = a.capacity + b.capacity
+    if total > hm_ops.MAX_KERNEL_CAPACITY:
+        return merge(a, b, out_capacity, sr)
+    hi, lo, val, nnz, ovf = hm_ops.merge(
+        a.hi, a.lo, a.val, b.hi, b.lo, b.val.astype(a.val.dtype),
+        out_capacity=out_capacity, sr_name=sr.name)
+    return AssocSegment(hi, lo, val, nnz), ovf
+
+
+def clear(seg: AssocSegment, sr: Semiring = sr_mod.PLUS_TIMES) -> AssocSegment:
+    return empty(seg.capacity, seg.dtype, sr)
+
+
+# ---------------------------------------------------------------- queries ---
+
+def lookup(seg: AssocSegment, row, col,
+           sr: Semiring = sr_mod.PLUS_TIMES) -> Array:
+    """Point query A(row, col); semiring zero when absent."""
+    match = (seg.hi == row) & (seg.lo == col)
+    zero = sr_mod.integer_zero(sr, seg.dtype)
+    return jnp.where(jnp.any(match),
+                     jnp.sum(jnp.where(match, seg.val, zero), dtype=seg.dtype)
+                     if sr.name == "plus.times"
+                     else seg.val[jnp.argmax(match)],
+                     zero)
+
+
+def extract_row(seg: AssocSegment, row) -> Tuple[Array, Array, Array]:
+    """All (col, val) pairs of one row plus a validity mask (Fig 1's
+    nearest-neighbor query)."""
+    m = seg.hi == row
+    return seg.lo, seg.val, m
+
+
+def reduce_rows(seg: AssocSegment, num_rows: int,
+                sr: Semiring = sr_mod.PLUS_TIMES) -> Array:
+    """Dense per-row reduction (e.g. out-degrees under plus.times)."""
+    ids = jnp.where(seg.hi == SENTINEL, num_rows, seg.hi)
+    # hi is sorted in canonical form and clipping maps to the max id only.
+    out = sr.segment_add(seg.val, ids, num_rows + 1, sorted=True)
+    return out[:num_rows]
+
+
+def reduce_cols(seg: AssocSegment, num_cols: int,
+                sr: Semiring = sr_mod.PLUS_TIMES) -> Array:
+    ids = jnp.where(seg.lo == SENTINEL, num_cols, seg.lo)
+    out = sr.segment_add(seg.val, ids, num_cols + 1)
+    return out[:num_cols]
+
+
+def spmv(seg: AssocSegment, x: Array, num_rows: int,
+         sr: Semiring = sr_mod.PLUS_TIMES) -> Array:
+    """y = A (.) x under the semiring: y[r] = add_c mul(A[r,c], x[c]).
+
+    This is the paper's Fig 1 graph operation (neighbors of a vertex) when x
+    is an indicator vector.
+    """
+    zero = sr_mod.integer_zero(sr, seg.dtype)
+    valid = seg.hi != SENTINEL
+    gathered = x[jnp.clip(seg.lo, 0, x.shape[0] - 1)]
+    prod = jnp.where(valid, sr.mul(seg.val, gathered.astype(seg.dtype)), zero)
+    ids = jnp.where(valid, seg.hi, num_rows)
+    return sr.segment_add(prod, ids, num_rows + 1, sorted=True)[:num_rows]
+
+
+def to_dense(seg: AssocSegment, num_rows: int, num_cols: int,
+             sr: Semiring = sr_mod.PLUS_TIMES) -> Array:
+    zero = sr_mod.integer_zero(sr, seg.dtype)
+    dense = jnp.full((num_rows, num_cols), zero, seg.dtype)
+    valid = seg.hi != SENTINEL
+    r = jnp.where(valid, seg.hi, 0)
+    c = jnp.where(valid, seg.lo, 0)
+    v = jnp.where(valid, seg.val, zero)
+    # Keys are unique in canonical form -> combine with sr.add against zero
+    # base is a plain set; use add to stay correct for non-canonical input.
+    if sr.name == "plus.times":
+        return dense.at[r, c].add(v)
+    return dense.at[r, c].max(v) if sr.name in ("max.plus", "max.min") \
+        else dense.at[r, c].min(v)
+
+
+def total(seg: AssocSegment, sr: Semiring = sr_mod.PLUS_TIMES) -> Array:
+    zero = sr_mod.integer_zero(sr, seg.dtype)
+    vals = jnp.where(seg.hi != SENTINEL, seg.val, zero)
+    if sr.name == "plus.times":
+        return jnp.sum(vals)
+    return jnp.max(vals) if sr.name in ("max.plus", "max.min") else jnp.min(vals)

@@ -1,0 +1,203 @@
+"""Hierarchical associative arrays (paper Fig 2).
+
+Layers A_0 .. A_L with cut thresholds c_0 < c_1 < ... < c_L.  Block updates
+are semiring-merged into A_0 (the smallest array, sized for the fastest
+memory — VMEM on TPU).  After each update the spill cascade runs bottom-up:
+if nnz(A_i) > c_i then A_i is merged into A_{i+1} and cleared.  Queries merge
+every layer.  Cuts trade update cost against query cost; they are config
+knobs swept by benchmarks/bench_cut_sweep.py.
+
+Capacity discipline (static shapes under jit):
+    C_0 = c_0 + block_size
+    C_i = c_i + C_{i-1}            (a spill can deposit at most C_{i-1})
+so no merge can arithmetically overflow except at the last layer, where an
+``overflow`` counter records dropped entries (the driver treats a non-zero
+counter as a snapshot-to-store event).
+
+The structure is a pytree: `vmap` gives per-device instance batches and
+`shard_map` places instance groups on devices (core/distributed.py), matching
+the paper's 34,000 share-nothing instances.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import assoc
+from repro.core import semiring as sr_mod
+from repro.core.assoc import AssocSegment
+from repro.core.semiring import Semiring
+
+Array = jax.Array
+
+
+def layer_capacities(cuts: Tuple[int, ...], block_size: int) -> Tuple[int, ...]:
+    caps = []
+    prev = block_size
+    for c in cuts:
+        caps.append(c + prev)
+        prev = caps[-1]
+    return tuple(caps)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class HierAssoc:
+    """Hierarchical associative array state (functional)."""
+
+    layers: Tuple[AssocSegment, ...]
+    spills: Array        # int32[L]  cumulative spill events per layer
+    overflow: Array      # int32     unique entries dropped at the last layer
+    n_updates: Array     # int64-ish int32 counter of raw updates ingested
+    cuts: Tuple[int, ...] = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.layers)
+
+    @property
+    def capacities(self) -> Tuple[int, ...]:
+        return tuple(l.capacity for l in self.layers)
+
+    def nnz_per_layer(self) -> Array:
+        return jnp.stack([l.nnz for l in self.layers])
+
+
+def create(cuts: Tuple[int, ...], block_size: int, dtype=jnp.float32,
+           sr: Semiring = sr_mod.PLUS_TIMES) -> HierAssoc:
+    if list(cuts) != sorted(cuts) or len(set(cuts)) != len(cuts):
+        raise ValueError(f"cuts must be strictly increasing, got {cuts}")
+    caps = layer_capacities(cuts, block_size)
+    return HierAssoc(
+        layers=tuple(assoc.empty(c, dtype, sr) for c in caps),
+        spills=jnp.zeros((len(cuts),), jnp.int32),
+        overflow=jnp.zeros((), jnp.int32),
+        n_updates=jnp.zeros((), jnp.int32),
+        cuts=tuple(cuts),
+    )
+
+
+def _merge(a, b, cap, sr, use_kernel):
+    if use_kernel:
+        return assoc.merge_kernel(a, b, cap, sr)
+    return assoc.merge(a, b, cap, sr)
+
+
+def _spill(src: AssocSegment, dst: AssocSegment, sr: Semiring,
+           use_kernel: bool = False
+           ) -> Tuple[AssocSegment, AssocSegment, Array]:
+    merged, ovf = _merge(dst, src, dst.capacity, sr, use_kernel)
+    return assoc.clear(src, sr), merged, ovf
+
+
+def _cascade(h: HierAssoc, sr: Semiring, use_kernel: bool = False) -> HierAssoc:
+    layers = list(h.layers)
+    spills = h.spills
+    overflow = h.overflow
+    for i in range(len(layers) - 1):
+        src, dst = layers[i], layers[i + 1]
+
+        def do_spill(src=src, dst=dst):
+            new_src, new_dst, ovf = _spill(src, dst, sr, use_kernel)
+            return new_src, new_dst, jnp.int32(1), ovf
+
+        def no_spill(src=src, dst=dst):
+            return src, dst, jnp.int32(0), jnp.int32(0)
+
+        new_src, new_dst, spilled, ovf = jax.lax.cond(
+            src.nnz > h.cuts[i], do_spill, no_spill)
+        layers[i], layers[i + 1] = new_src, new_dst
+        spills = spills.at[i].add(spilled)
+        overflow = overflow + ovf
+    # Last layer has no spill target; flag pressure past its cut.
+    last = layers[-1]
+    spills = spills.at[-1].add(
+        (last.nnz > h.cuts[-1]).astype(jnp.int32))
+    return dataclasses.replace(
+        h, layers=tuple(layers), spills=spills, overflow=overflow)
+
+
+def update(h: HierAssoc, rows: Array, cols: Array, vals: Array,
+           mask: Array | None = None,
+           sr: Semiring = sr_mod.PLUS_TIMES,
+           use_kernel: bool = False,
+           lazy_l0: bool = False) -> HierAssoc:
+    """Block-update: semiring-add a COO block into the hierarchy (Fig 2).
+
+    ``lazy_l0=True`` (beyond-paper optimization, EXPERIMENTS.md §Perf):
+    layer 0 becomes an APPEND buffer — the incoming block is deduped and
+    sorted (O(B log B)) but NOT re-merged with layer 0's contents
+    (O((c0+B) log (c0+B)) saved per block); layer 0 is only canonicalized
+    when the spill cascade or a query consumes it.  This is the LSM
+    memtable discipline applied inside the paper's hierarchy.  ``nnz`` of
+    layer 0 then counts occupied SLOTS (an upper bound on unique keys),
+    which is exactly what the cut threshold compares against.  Restricted
+    to plus.times: duplicate keys in the buffer must sum-combine.
+    """
+    if lazy_l0 and sr.name != "plus.times":
+        raise ValueError("lazy_l0 requires the plus.times semiring")
+    merged, ovf0 = assoc.from_coo(rows, cols, vals, rows.shape[-1], sr,
+                                  mask=mask)
+    if lazy_l0:
+        l0 = h.layers[0]
+        b = merged.capacity
+        start = jnp.minimum(l0.nnz, l0.capacity - b)
+        layer0 = assoc.AssocSegment(
+            hi=jax.lax.dynamic_update_slice(l0.hi, merged.hi, (start,)),
+            lo=jax.lax.dynamic_update_slice(l0.lo, merged.lo, (start,)),
+            val=jax.lax.dynamic_update_slice(
+                l0.val, merged.val.astype(l0.val.dtype), (start,)),
+            nnz=start + jnp.int32(b))
+        ovf1 = jnp.zeros((), jnp.int32)
+    else:
+        layer0, ovf1 = _merge(h.layers[0], merged, h.layers[0].capacity, sr,
+                              use_kernel)
+    n_new = rows.shape[-1] if mask is None else jnp.sum(mask)
+    h = dataclasses.replace(
+        h,
+        layers=(layer0,) + h.layers[1:],
+        overflow=h.overflow + ovf0 + ovf1,
+        n_updates=h.n_updates + jnp.int32(n_new),
+    )
+    return _cascade(h, sr, use_kernel)
+
+
+def query_all(h: HierAssoc, sr: Semiring = sr_mod.PLUS_TIMES,
+              use_kernel: bool = False) -> AssocSegment:
+    """Sum all layers into one canonical segment (paper: query path)."""
+    acc = h.layers[-1]
+    cap = sum(h.capacities)
+    for layer in reversed(h.layers[:-1]):
+        acc, _ = _merge(acc, layer, cap, sr, use_kernel)
+    return acc
+
+
+def lookup(h: HierAssoc, row, col, sr: Semiring = sr_mod.PLUS_TIMES) -> Array:
+    """Point query without materializing the merged array."""
+    vals = [assoc.lookup(l, row, col, sr) for l in h.layers]
+    out = vals[0]
+    for v in vals[1:]:
+        out = sr.add(out, v)
+    return out
+
+
+def total_nnz_upper_bound(h: HierAssoc) -> Array:
+    """Sum of per-layer nnz (keys may repeat across layers)."""
+    return jnp.sum(h.nnz_per_layer())
+
+
+def flush(h: HierAssoc, sr: Semiring = sr_mod.PLUS_TIMES) -> HierAssoc:
+    """Force-spill every layer downward (checkpoint/drain path)."""
+    layers = list(h.layers)
+    spills = h.spills
+    overflow = h.overflow
+    for i in range(len(layers) - 1):
+        new_src, new_dst, ovf = _spill(layers[i], layers[i + 1], sr)
+        layers[i], layers[i + 1] = new_src, new_dst
+        spills = spills.at[i].add(1)
+        overflow = overflow + ovf
+    return dataclasses.replace(h, layers=tuple(layers), spills=spills,
+                               overflow=overflow)

@@ -1,0 +1,104 @@
+"""Semirings for associative-array algebra (paper §II).
+
+An associative array A: K1 x K2 -> V carries a commutative monoid (V, add, zero)
+used to combine colliding entries on block update, plus a multiplicative op for
+array-array contraction (A @ B).  The paper grounds SQL (union-intersection),
+NoSQL and NewSQL table semantics in this algebra; we expose the standard set.
+
+Only `add`/`zero` participate in the streaming-update hot path; `mul`/`one`
+are used by the query-side contractions (e.g. nearest-neighbor = A @ v).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Semiring:
+    """A (add, zero, mul, one) semiring over array values.
+
+    ``segment_add`` must implement the same reduction as ``add`` over runs:
+    (vals, segment_ids, num_segments) -> per-segment reduction.  It exists
+    because XLA has dedicated lowerings for segment_{sum,min,max,prod} that
+    are much faster than a generic associative scan.
+    """
+
+    name: str
+    add: Callable[[Array, Array], Array]
+    zero: float
+    mul: Callable[[Array, Array], Array]
+    one: float
+    segment_add: Callable[..., Array]
+
+    def zeros(self, shape, dtype) -> Array:
+        return jnp.full(shape, jnp.asarray(self.zero, dtype=dtype))
+
+
+def _seg(fn):
+    def run(vals, segment_ids, num_segments, sorted=False):
+        return fn(vals, segment_ids, num_segments=num_segments,
+                  indices_are_sorted=sorted)
+    return run
+
+
+PLUS_TIMES = Semiring(
+    name="plus.times",
+    add=jnp.add, zero=0.0,
+    mul=jnp.multiply, one=1.0,
+    segment_add=_seg(jax.ops.segment_sum),
+)
+
+# max.plus — tropical; value combine keeps the max (e.g. "latest timestamp").
+MAX_PLUS = Semiring(
+    name="max.plus",
+    add=jnp.maximum, zero=-jnp.inf,
+    mul=jnp.add, one=0.0,
+    segment_add=_seg(jax.ops.segment_max),
+)
+
+# min.plus — shortest-path style combine.
+MIN_PLUS = Semiring(
+    name="min.plus",
+    add=jnp.minimum, zero=jnp.inf,
+    mul=jnp.add, one=0.0,
+    segment_add=_seg(jax.ops.segment_min),
+)
+
+# max.min — bottleneck / fuzzy-logic semiring (paper's union-intersection
+# analogue over numeric stand-ins).
+MAX_MIN = Semiring(
+    name="max.min",
+    add=jnp.maximum, zero=-jnp.inf,
+    mul=jnp.minimum, one=jnp.inf,
+    segment_add=_seg(jax.ops.segment_max),
+)
+
+
+_BY_NAME = {s.name: s for s in (PLUS_TIMES, MAX_PLUS, MIN_PLUS, MAX_MIN)}
+
+
+def get(name: str) -> Semiring:
+    try:
+        return _BY_NAME[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown semiring {name!r}; available: {sorted(_BY_NAME)}")
+
+
+def integer_zero(sr: Semiring, dtype) -> Array:
+    """Semiring zero clamped into an integer dtype's range."""
+    z = sr.zero
+    if jnp.issubdtype(dtype, jnp.integer):
+        info = jnp.iinfo(dtype)
+        if z == -jnp.inf:
+            return jnp.asarray(info.min, dtype)
+        if z == jnp.inf:
+            return jnp.asarray(info.max, dtype)
+    return jnp.asarray(z, dtype)

@@ -1,0 +1,181 @@
+"""Vector-valued associative arrays: int keys -> R^D payloads.
+
+The scalar AssocSegment (core/assoc.py) stores A: (row, col) -> scalar.
+Sparse *gradient* streams in training are row-keyed with vector payloads
+(embedding rows, expert statistics), so this module provides the same
+canonical-form machinery for A: key -> R^D:
+
+    key: int32[C]       sorted, unique, SENTINEL-padded
+    val: f32[C, D]      payload rows (zeros in padding)
+    nnz: int32
+
+plus the hierarchical stack (HierVec) with the paper's cut/spill cascade.
+optim/sparse_update.py builds the embedding-gradient accumulator on top:
+updates land in the small fast layer; spills batch-apply to the master
+table in HBM — the paper's fast-memory claim remapped to training state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.assoc import SENTINEL
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class VecSegment:
+    key: Array                    # int32[C]
+    val: Array                    # f32[C, D]
+    nnz: Array                    # int32
+
+    @property
+    def capacity(self) -> int:
+        return self.key.shape[-1]
+
+    @property
+    def dim(self) -> int:
+        return self.val.shape[-1]
+
+
+def empty(capacity: int, dim: int, dtype=jnp.float32) -> VecSegment:
+    return VecSegment(
+        key=jnp.full((capacity,), SENTINEL, jnp.int32),
+        val=jnp.zeros((capacity, dim), dtype),
+        nnz=jnp.zeros((), jnp.int32))
+
+
+def _canonicalize(key: Array, val: Array, out_capacity: int
+                  ) -> Tuple[VecSegment, Array]:
+    n = key.shape[0]
+    order = jnp.argsort(key)
+    k_s, v_s = key[order], val[order]
+    first = jnp.concatenate([jnp.ones((1,), bool), k_s[1:] != k_s[:-1]])
+    seg_id = jnp.cumsum(first) - 1
+    combined = jax.ops.segment_sum(v_s, seg_id, num_segments=n,
+                                   indices_are_sorted=True)
+    valid = k_s != SENTINEL
+    n_unique = jnp.sum(first & valid).astype(jnp.int32)
+    out_key = jnp.full((n,), SENTINEL, jnp.int32).at[seg_id].set(k_s)
+    live = jnp.arange(n) < n_unique
+    out_key = jnp.where(live, out_key, SENTINEL)
+    out_val = jnp.where(live[:, None], combined.astype(val.dtype), 0)
+
+    if out_capacity >= n:
+        pad = out_capacity - n
+        out_key = jnp.concatenate(
+            [out_key, jnp.full((pad,), SENTINEL, jnp.int32)])
+        out_val = jnp.concatenate(
+            [out_val, jnp.zeros((pad, val.shape[1]), val.dtype)])
+        overflow = jnp.zeros((), jnp.int32)
+    else:
+        out_key = out_key[:out_capacity]
+        out_val = out_val[:out_capacity]
+        overflow = jnp.maximum(n_unique - out_capacity, 0).astype(jnp.int32)
+    return VecSegment(out_key, out_val,
+                      jnp.minimum(n_unique, out_capacity)), overflow
+
+
+def from_rows(keys: Array, vals: Array, capacity: int,
+              mask: Array | None = None) -> Tuple[VecSegment, Array]:
+    keys = keys.astype(jnp.int32)
+    if mask is not None:
+        keys = jnp.where(mask, keys, SENTINEL)
+        vals = jnp.where(mask[:, None], vals, 0)
+    return _canonicalize(keys, vals, capacity)
+
+
+def merge(a: VecSegment, b: VecSegment, out_capacity: int
+          ) -> Tuple[VecSegment, Array]:
+    return _canonicalize(jnp.concatenate([a.key, b.key]),
+                         jnp.concatenate([a.val, b.val.astype(a.val.dtype)]),
+                         out_capacity)
+
+
+def clear(seg: VecSegment) -> VecSegment:
+    return empty(seg.capacity, seg.dim, seg.val.dtype)
+
+
+def scatter_apply(table: Array, seg: VecSegment, scale: float | Array = 1.0
+                  ) -> Array:
+    """table[key] += scale * val for live entries (batched HBM apply)."""
+    safe = jnp.clip(seg.key, 0, table.shape[0] - 1)
+    contrib = jnp.where((seg.key != SENTINEL)[:, None], seg.val, 0)
+    return table.at[safe].add((scale * contrib).astype(table.dtype))
+
+
+# --------------------------------------------------------------- hierarchy --
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class HierVec:
+    layers: Tuple[VecSegment, ...]
+    spills: Array
+    overflow: Array
+    n_updates: Array
+    cuts: Tuple[int, ...] = dataclasses.field(metadata=dict(static=True))
+
+    def nnz_per_layer(self) -> Array:
+        return jnp.stack([l.nnz for l in self.layers])
+
+
+def create(cuts: Tuple[int, ...], block_size: int, dim: int,
+           dtype=jnp.float32) -> HierVec:
+    caps, prev = [], block_size
+    for c in cuts:
+        caps.append(c + prev)
+        prev = caps[-1]
+    return HierVec(
+        layers=tuple(empty(c, dim, dtype) for c in caps),
+        spills=jnp.zeros((len(cuts),), jnp.int32),
+        overflow=jnp.zeros((), jnp.int32),
+        n_updates=jnp.zeros((), jnp.int32),
+        cuts=tuple(cuts))
+
+
+def update(h: HierVec, keys: Array, vals: Array,
+           mask: Array | None = None) -> HierVec:
+    block, ovf0 = from_rows(keys, vals, keys.shape[0], mask)
+    layer0, ovf1 = merge(h.layers[0], block, h.layers[0].capacity)
+    n_new = keys.shape[0] if mask is None else jnp.sum(mask)
+    layers = [layer0] + list(h.layers[1:])
+    spills, overflow = h.spills, h.overflow + ovf0 + ovf1
+    for i in range(len(layers) - 1):
+        src, dst = layers[i], layers[i + 1]
+
+        def spill(src=src, dst=dst):
+            merged, ovf = merge(dst, src, dst.capacity)
+            return clear(src), merged, jnp.int32(1), ovf
+
+        def hold(src=src, dst=dst):
+            return src, dst, jnp.int32(0), jnp.int32(0)
+
+        layers[i], layers[i + 1], s, ovf = jax.lax.cond(
+            src.nnz > h.cuts[i], spill, hold)
+        spills = spills.at[i].add(s)
+        overflow = overflow + ovf
+    return dataclasses.replace(
+        h, layers=tuple(layers), spills=spills, overflow=overflow,
+        n_updates=h.n_updates + jnp.int32(n_new))
+
+
+def drain_to_table(h: HierVec, table: Array, scale: float | Array = 1.0
+                   ) -> Tuple[HierVec, Array]:
+    """Apply every layer to the table and clear the hierarchy (flush)."""
+    for seg in h.layers:
+        table = scatter_apply(table, seg, scale)
+    return dataclasses.replace(
+        h, layers=tuple(clear(l) for l in h.layers)), table
+
+
+def query_all(h: HierVec) -> VecSegment:
+    cap = sum(l.capacity for l in h.layers)
+    acc = h.layers[-1]
+    for layer in reversed(h.layers[:-1]):
+        acc, _ = merge(acc, layer, cap)
+    return acc

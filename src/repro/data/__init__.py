@@ -1,0 +1,2 @@
+"""Data substrate: generators + sharded streaming pipeline."""
+from repro.data import graphs, pipeline, powerlaw, synthetic  # noqa: F401

@@ -1,0 +1,198 @@
+"""Graph builders + neighbor sampling for the GNN architectures.
+
+Message passing everywhere uses edge lists + segment reductions (JAX has no
+CSR/CSC; BCOO only) — the edge-index -> scatter representation IS the system,
+per the assignment brief.  Shapes covered:
+
+  full_graph_sm   cora-scale full-batch      (2,708 nodes / 10,556 edges)
+  minibatch_lg    reddit-scale sampled       (fanout 15-10 node flows)
+  ogb_products    2.4M-node full-batch       (dry-run scale)
+  molecule        128 x 30-node batched small graphs
+
+The fanout sampler follows GraphSAGE "node flow" semantics: layer l samples
+``fanout[l]`` neighbors per frontier node with replacement (replicated nodes
+keep shapes static under jit; aggregation dedups by construction).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.powerlaw import GRAPH500, rmat_edges
+
+
+@partial(jax.jit, static_argnames=("n_nodes", "n_edges", "d_feat",
+                                   "n_classes", "symmetric"))
+def random_graph(key: jax.Array, n_nodes: int, n_edges: int, d_feat: int,
+                 n_classes: int = 16, symmetric: bool = True):
+    """Power-law graph with node features/labels (full-batch training)."""
+    ke, kf, kl = jax.random.split(key, 3)
+    scale = max(1, (n_nodes - 1).bit_length())
+    src, dst = rmat_edges(ke, n_edges, scale)
+    src, dst = src % n_nodes, dst % n_nodes
+    if symmetric:  # undirected message passing: use half fwd, half reversed
+        half = n_edges // 2
+        src, dst = (jnp.concatenate([src[:half], dst[half:]]),
+                    jnp.concatenate([dst[:half], src[half:]]))
+    feat = jax.random.normal(kf, (n_nodes, d_feat), jnp.float32)
+    labels = jax.random.randint(kl, (n_nodes,), 0, n_classes)
+    return dict(node_feat=feat, edge_src=src.astype(jnp.int32),
+                edge_dst=dst.astype(jnp.int32),
+                labels=labels.astype(jnp.int32))
+
+
+@partial(jax.jit, static_argnames=("n_graphs", "n_nodes", "n_edges",
+                                   "d_feat", "n_classes"))
+def batched_molecules(key: jax.Array, n_graphs: int, n_nodes: int,
+                      n_edges: int, d_feat: int, n_classes: int = 2):
+    """Batch of small graphs packed into one edge list with id offsets."""
+    kf, ke, kl = jax.random.split(key, 3)
+    feat = jax.random.normal(kf, (n_graphs * n_nodes, d_feat))
+    ks, kd = jax.random.split(ke)
+    src = jax.random.randint(ks, (n_graphs, n_edges), 0, n_nodes)
+    dst = jax.random.randint(kd, (n_graphs, n_edges), 0, n_nodes)
+    offset = (jnp.arange(n_graphs) * n_nodes)[:, None]
+    graph_ids = jnp.repeat(jnp.arange(n_graphs, dtype=jnp.int32), n_nodes)
+    labels = jax.random.randint(kl, (n_graphs,), 0, n_classes)
+    return dict(node_feat=feat,
+                edge_src=(src + offset).reshape(-1).astype(jnp.int32),
+                edge_dst=(dst + offset).reshape(-1).astype(jnp.int32),
+                graph_ids=graph_ids, labels=labels.astype(jnp.int32))
+
+
+def to_csr(src: jax.Array, dst: jax.Array, n_nodes: int):
+    """Sort edges by src; returns (indptr [N+1], indices [E] = sorted dst)."""
+    order = jnp.argsort(src)
+    src_s, dst_s = src[order], dst[order]
+    indptr = jnp.searchsorted(
+        src_s, jnp.arange(n_nodes + 1, dtype=src.dtype)).astype(jnp.int32)
+    return indptr, dst_s.astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("fanouts",))
+def sample_node_flow(key: jax.Array, indptr: jax.Array, indices: jax.Array,
+                     seeds: jax.Array, fanouts: Tuple[int, ...]):
+    """GraphSAGE fanout sampling with replacement.
+
+    Returns ``frontiers``: tuple of node-id arrays, frontiers[0] = seeds [B],
+    frontiers[l+1] [B * prod(fanouts[:l+1])] = sampled neighbors of
+    frontiers[l] (row-major: node i's samples at [i*f, (i+1)*f)).  Nodes with
+    degree 0 replicate themselves (self-loop semantics, mask-free shapes).
+    """
+    frontiers = [seeds.astype(jnp.int32)]
+    cur = frontiers[0]
+    for l, f in enumerate(fanouts):
+        k = jax.random.fold_in(key, l)
+        deg = indptr[cur + 1] - indptr[cur]                     # [Nf]
+        draw = jax.random.randint(k, (cur.shape[0], f), 0, 1 << 30)
+        slot = indptr[cur][:, None] + draw % jnp.maximum(deg[:, None], 1)
+        nbr = indices[jnp.clip(slot, 0, indices.shape[0] - 1)]  # [Nf, f]
+        nbr = jnp.where(deg[:, None] > 0, nbr, cur[:, None])    # isolated
+        cur = nbr.reshape(-1)
+        frontiers.append(cur)
+    return tuple(frontiers)
+
+
+def flow_edges(frontiers: Sequence[jax.Array], fanouts: Tuple[int, ...]):
+    """Edge lists (src=child sample, dst=parent position) per flow layer,
+    in *local position space* so models can segment-reduce directly."""
+    edges = []
+    for l, f in enumerate(fanouts):
+        n_par = frontiers[l].shape[0]
+        dst = jnp.repeat(jnp.arange(n_par, dtype=jnp.int32), f)
+        src = jnp.arange(n_par * f, dtype=jnp.int32)
+        edges.append((src, dst))
+    return edges
+
+
+def flow_subgraph(frontiers: Sequence[jax.Array],
+                  fanouts: Tuple[int, ...]):
+    """Union subgraph of a node flow, in local position space.
+
+    Nodes = concat(frontiers) (seeds first, so seed positions are [0, B)).
+    Edges connect each sampled child position to its parent position —
+    message direction child -> parent, matching GraphSAGE aggregation.
+    Returns (node_ids [N_sub], edge_src [E_sub], edge_dst [E_sub]).
+    """
+    node_ids = jnp.concatenate(list(frontiers))
+    offsets = [0]
+    for f in frontiers:
+        offsets.append(offsets[-1] + f.shape[0])
+    srcs, dsts = [], []
+    for l, fan in enumerate(fanouts):
+        n_par = frontiers[l].shape[0]
+        dst = offsets[l] + jnp.repeat(jnp.arange(n_par, dtype=jnp.int32), fan)
+        src = offsets[l + 1] + jnp.arange(n_par * fan, dtype=jnp.int32)
+        srcs.append(src)
+        dsts.append(dst)
+    return node_ids, jnp.concatenate(srcs), jnp.concatenate(dsts)
+
+
+def flow_sizes(batch_nodes: int, fanouts: Tuple[int, ...]):
+    """Static (n_sub_nodes, n_sub_edges) of a fanout node flow."""
+    sizes = [batch_nodes]
+    for f in fanouts:
+        sizes.append(sizes[-1] * f)
+    return sum(sizes), sum(sizes[1:])
+
+
+def icosahedral_multimesh(refinement: int):
+    """GraphCast multi-mesh: icosahedron refined ``refinement`` times, with
+    the union of ALL refinement levels' edges (bidirectional).
+
+    Returns (vertices [N, 3] float32 on the unit sphere, edge_src, edge_dst).
+    N = 10 * 4^r + 2 (40,962 at r=6, the paper's mesh).  Built with numpy on
+    host (one-time, cached by callers).
+    """
+    import numpy as np
+
+    phi = (1 + 5 ** 0.5) / 2
+    verts = np.array(
+        [(-1, phi, 0), (1, phi, 0), (-1, -phi, 0), (1, -phi, 0),
+         (0, -1, phi), (0, 1, phi), (0, -1, -phi), (0, 1, -phi),
+         (phi, 0, -1), (phi, 0, 1), (-phi, 0, -1), (-phi, 0, 1)],
+        np.float64)
+    verts /= np.linalg.norm(verts, axis=1, keepdims=True)
+    faces = np.array(
+        [(0, 11, 5), (0, 5, 1), (0, 1, 7), (0, 7, 10), (0, 10, 11),
+         (1, 5, 9), (5, 11, 4), (11, 10, 2), (10, 7, 6), (7, 1, 8),
+         (3, 9, 4), (3, 4, 2), (3, 2, 6), (3, 6, 8), (3, 8, 9),
+         (4, 9, 5), (2, 4, 11), (6, 2, 10), (8, 6, 7), (9, 8, 1)],
+        np.int64)
+
+    all_edges = set()
+
+    def add_face_edges(fs):
+        for a, b, c in fs:
+            for u, v in ((a, b), (b, c), (c, a)):
+                all_edges.add((min(u, v), max(u, v)))
+
+    add_face_edges(faces)
+    for _ in range(refinement):
+        mid_cache = {}
+        new_faces = []
+
+        def midpoint(u, v):
+            nonlocal verts
+            k = (min(u, v), max(u, v))
+            if k not in mid_cache:
+                m = verts[u] + verts[v]
+                m /= np.linalg.norm(m)
+                mid_cache[k] = len(verts)
+                verts = np.vstack([verts, m])
+            return mid_cache[k]
+
+        for a, b, c in faces:
+            ab, bc, ca = midpoint(a, b), midpoint(b, c), midpoint(c, a)
+            new_faces += [(a, ab, ca), (b, bc, ab), (c, ca, bc),
+                          (ab, bc, ca)]
+        faces = np.array(new_faces, np.int64)
+        add_face_edges(faces)           # multi-mesh: keep every level
+
+    e = np.array(sorted(all_edges), np.int32)
+    src = np.concatenate([e[:, 0], e[:, 1]])
+    dst = np.concatenate([e[:, 1], e[:, 0]])
+    return verts.astype(np.float32), src, dst

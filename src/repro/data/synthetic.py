@@ -1,0 +1,68 @@
+"""Synthetic token / recsys streams for the assigned architectures.
+
+Everything is generated on device from a PRNG key (no file I/O): Zipf-ish
+token streams for LM training, and a Criteo-style click stream (13 dense +
+26 categorical fields) with a planted logistic teacher so training losses
+measurably decrease in the examples.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=("batch", "seq_len", "vocab"))
+def token_batch(key: jax.Array, batch: int, seq_len: int, vocab: int):
+    """Zipf-distributed tokens; labels = next token (causal LM)."""
+    ranks = jnp.arange(1, vocab + 1, dtype=jnp.float32)
+    logits = -1.1 * jnp.log(ranks)                  # zipf(1.1) over ids
+    toks = jax.random.categorical(key, logits, shape=(batch, seq_len + 1))
+    return dict(tokens=toks[:, :-1].astype(jnp.int32),
+                labels=toks[:, 1:].astype(jnp.int32))
+
+
+def token_stream(key: jax.Array, steps: int, batch: int, seq_len: int,
+                 vocab: int):
+    """Host-side iterator of token batches (one key fold per step)."""
+    for i in range(steps):
+        yield token_batch(jax.random.fold_in(key, i), batch, seq_len, vocab)
+
+
+@partial(jax.jit, static_argnames=("batch", "n_dense", "n_sparse",
+                                   "vocab_per_field", "multi_hot"))
+def recsys_batch(key: jax.Array, batch: int, n_dense: int = 13,
+                 n_sparse: int = 26, vocab_per_field: int = 1_000_000,
+                 multi_hot: int = 1):
+    """Criteo-like batch: dense [B, 13] + sparse ids [B, 26, H] + labels.
+
+    Labels come from a fixed random logistic teacher over the dense features
+    and a hash of the sparse ids, so examples can show loss decreasing.
+    """
+    kd, ks, kt = jax.random.split(key, 3)
+    dense = jax.random.normal(kd, (batch, n_dense))
+    # zipf-ish ids: floor(exp(u * log V)) concentrates mass on small ids
+    u = jax.random.uniform(ks, (batch, n_sparse, multi_hot))
+    sparse = jnp.floor(jnp.exp(u * jnp.log(float(vocab_per_field)))
+                       ).astype(jnp.int32) % vocab_per_field
+    w = jax.random.normal(jax.random.PRNGKey(7), (n_dense,))
+    sig = (dense @ w) / jnp.sqrt(n_dense) + 0.1 * jnp.sin(
+        jnp.sum(sparse[..., 0], axis=1) / 1000.0)
+    labels = (jax.random.uniform(kt, (batch,)) <
+              jax.nn.sigmoid(sig)).astype(jnp.float32)
+    return dict(dense=dense, sparse=sparse, labels=labels)
+
+
+def recsys_stream(key: jax.Array, steps: int, batch: int, **kw):
+    for i in range(steps):
+        yield recsys_batch(jax.random.fold_in(key, i), batch, **kw)
+
+
+@partial(jax.jit, static_argnames=("batch", "n_candidates", "dim"))
+def retrieval_batch(key: jax.Array, batch: int, n_candidates: int, dim: int):
+    """Retrieval-scoring shape: queries [B, D] vs candidate matrix [N, D]."""
+    kq, kc = jax.random.split(key)
+    return dict(query=jax.random.normal(kq, (batch, dim)),
+                candidates=jax.random.normal(kc, (n_candidates, dim)))

@@ -1,0 +1,4 @@
+"""Mesh-level distribution: sharding policies and activation constraints."""
+from repro.distribution.sharding import (  # noqa: F401
+    ShardingPolicy, constrain, current_policy, use_policy,
+)

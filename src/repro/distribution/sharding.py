@@ -1,0 +1,243 @@
+"""Sharding policy: param PartitionSpecs + activation constraints.
+
+Design (1000+-node posture, MaxText-style):
+
+  mesh axes            (pod, data, model)  |  (data, model)
+  batch / tokens       sharded over (pod, data)      — DP across pods
+  params + opt states  sharded over  data            — FSDP within a pod
+  heads / ffn / vocab  sharded over  model           — TP
+  MoE experts          sharded over  model           — EP (or expert-TP when
+                                                       n_experts % tp != 0)
+
+Cross-pod traffic is therefore only the once-per-step gradient all-reduce
+over ``pod`` (plus optional int8 compression, optim/compression.py); FSDP
+all-gathers stay inside a pod.
+
+Models call ``constrain(x, *axes)`` with *logical* axis names; the active
+policy (a contextvar set by the launcher) maps them to mesh axes and applies
+``with_sharding_constraint``.  With no active policy it is a no-op, so model
+code runs unmodified in single-device tests.
+
+Logical axis vocabulary:
+  "batch"   -> (pod, data)     "fsdp"  -> data
+  "tp"      -> model           "ep"    -> model (expert dim)
+  None      -> replicated
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_POLICY: contextvars.ContextVar = contextvars.ContextVar(
+    "sharding_policy", default=None)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    mesh: Mesh
+    batch_axes: Tuple[str, ...]          # ("pod","data") or ("data",)
+    fsdp_axis: Optional[str] = "data"
+    tp_axis: Optional[str] = "model"
+
+    def resolve(self, logical: Optional[str]):
+        if logical is None:
+            return None
+        if logical == "batch":
+            return self.batch_axes
+        if logical == "fsdp":
+            return self.fsdp_axis
+        if logical in ("tp", "ep"):
+            return self.tp_axis
+        if logical == "all":                 # every mesh axis (flat shard)
+            return tuple(self.mesh.axis_names)
+        raise ValueError(f"unknown logical axis {logical!r}")
+
+    def spec(self, *logical) -> P:
+        return P(*(self.resolve(l) for l in logical))
+
+    def sharding(self, *logical) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+    def axis_size(self, logical: str) -> int:
+        ax = self.resolve(logical)
+        if ax is None:
+            return 1
+        if isinstance(ax, tuple):
+            import math
+            return math.prod(self.mesh.shape[a] for a in ax)
+        return self.mesh.shape[ax]
+
+
+def current_policy() -> Optional[ShardingPolicy]:
+    return _POLICY.get()
+
+
+@contextlib.contextmanager
+def use_policy(policy: Optional[ShardingPolicy]):
+    token = _POLICY.set(policy)
+    try:
+        yield policy
+    finally:
+        _POLICY.reset(token)
+
+
+def constrain(x, *logical, divisible_dims: bool = True):
+    """with_sharding_constraint under the active policy (no-op without one).
+
+    Logical axes that do not evenly divide their dim are dropped (GSPMD would
+    pad; dropping keeps memory analysis honest and lets propagation choose).
+    """
+    pol = current_policy()
+    if pol is None:
+        return x
+    specs = []
+    for dim, logical_ax in zip(x.shape, logical):
+        ax = pol.resolve(logical_ax)
+        if ax is not None and divisible_dims:
+            import math
+            size = (math.prod(pol.mesh.shape[a] for a in ax)
+                    if isinstance(ax, tuple) else pol.mesh.shape[ax])
+            if dim % size != 0:
+                ax = None
+        specs.append(ax)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(pol.mesh, P(*specs)))
+
+
+def make_policy(mesh: Mesh, layout: str = "2d") -> ShardingPolicy:
+    """Policy for a production mesh (launch/mesh.py shapes).
+
+    layout "2d": batch over (pod, data); FSDP on data; TP on model.
+    layout "dp": batch over EVERY axis (model folds into data parallelism);
+                 FSDP on data; no TP.  The right call for models whose head
+                 counts don't divide the model axis (e.g. smollm's 15 heads)
+                 — replicated-TP compute is worse than pure DP.
+    """
+    names = mesh.axis_names
+    pod = ("pod",) if "pod" in names else ()
+    if layout == "dp":
+        return ShardingPolicy(mesh, batch_axes=pod + ("data", "model"),
+                              fsdp_axis="data", tp_axis=None)
+    if layout != "2d":
+        raise ValueError(f"unknown layout {layout!r}")
+    return ShardingPolicy(mesh, batch_axes=pod + ("data",),
+                          fsdp_axis="data", tp_axis="model")
+
+
+# ------------------------------------------------------- param spec rules ---
+
+def _divides(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def lm_param_specs(params, cfg, policy: ShardingPolicy):
+    """PartitionSpecs for transformer LM params (FSDP x TP).
+
+    Rules keyed on path leaf names; every matmul weight is sharded on one
+    dim by ``fsdp`` and (where divisible) the other by ``tp``.
+    """
+    tp = policy.axis_size("tp")
+    fs = policy.axis_size("fsdp")
+    TPA = policy.tp_axis                   # None under the "dp" layout
+    FSA = policy.fsdp_axis
+
+    def spec_for(path: str, leaf) -> P:
+        shape = leaf.shape
+        name = path.split("/")[-1]
+
+        def ok(dim_i, k):
+            return _divides(shape[dim_i], k)
+
+        # stacked layer params carry a leading L dim -> shift rules right
+        off = 1 if path.startswith("layers/") and leaf.ndim >= 2 else 0
+
+        if name in ("embed", "lm_head"):
+            # [V, D]: vocab over tp (sharded logits), D over fsdp
+            return P(TPA if ok(0, tp) else None,
+                     FSA if ok(1, fs) else None)
+        if leaf.ndim - off == 1:                    # norms / biases
+            return P(*([None] * leaf.ndim))
+        if name in ("w_gate", "w_up", "wq", "wk", "wv", "wq_a", "wq_b",
+                    "wkv_a", "wkv_b", "router", "shared_gate", "shared_up"):
+            if leaf.ndim - off == 3:                # MoE experts [E, D, F]
+                if cfg.moe_shard == "ep" and ok(off, tp):
+                    return P(*([None] * off), TPA,
+                             FSA if ok(off + 1, fs) else None, None)
+                return P(*([None] * off), None,    # expert-TP: shard D, F
+                         FSA if ok(off + 1, fs) else None,
+                         TPA if ok(off + 2, tp) else None)
+            return P(*([None] * off),
+                     FSA if ok(off, fs) else None,
+                     TPA if ok(off + 1, tp) else None)
+        if name in ("w_down", "wo", "shared_down"):
+            if leaf.ndim - off == 3:                # [E, F, D]
+                if cfg.moe_shard == "ep" and ok(off, tp):
+                    return P(*([None] * off), TPA, None,
+                             FSA if ok(off + 2, fs) else None)
+                return P(*([None] * off), None,    # expert-TP: shard F, D
+                         TPA if ok(off + 1, tp) else None,
+                         FSA if ok(off + 2, fs) else None)
+            return P(*([None] * off),
+                     TPA if ok(off, tp) else None,
+                     FSA if ok(off + 1, fs) else None)
+        # fallback: fsdp on the largest divisible dim
+        for i in range(leaf.ndim - 1, -1, -1):
+            if ok(i, fs):
+                return P(*([None] * i), FSA,
+                         *([None] * (leaf.ndim - i - 1)))
+        return P(*([None] * leaf.ndim))
+
+    return _tree_map_with_path(spec_for, params)
+
+
+def gnn_param_specs(params, cfg, policy: ShardingPolicy):
+    """GNN params are small: replicate 1-D, fsdp-shard big matrices."""
+    fs = policy.axis_size("fsdp")
+    FSA = policy.fsdp_axis
+
+    def spec_for(path, leaf):
+        if leaf.ndim >= 2 and fs > 1 and leaf.shape[-1] % fs == 0 \
+                and leaf.size > 1 << 16:
+            return P(*([None] * (leaf.ndim - 1)), FSA)
+        return P(*([None] * leaf.ndim))
+
+    return _tree_map_with_path(spec_for, params)
+
+
+def recsys_param_specs(params, cfg, policy: ShardingPolicy):
+    """Embedding table rows shard over the WHOLE mesh; MLPs fsdp x tp."""
+    tp = policy.axis_size("tp")
+    fs = policy.axis_size("fsdp")
+    TPA, FSA = policy.tp_axis, policy.fsdp_axis
+    every = tuple(policy.mesh.axis_names)
+
+    def spec_for(path, leaf):
+        name = path.split("/")[-1]
+        if name == "table":                       # [rows, dim]
+            return P(every, None)
+        if leaf.ndim == 2:
+            return P(FSA if fs > 1 and _divides(leaf.shape[0], fs)
+                     else None,
+                     TPA if tp > 1 and _divides(leaf.shape[1], tp)
+                     else None)
+        return P(*([None] * leaf.ndim))
+
+    return _tree_map_with_path(spec_for, params)
+
+
+def _tree_map_with_path(fn, tree):
+    def wrap(kp, leaf):
+        path = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        return fn(path, leaf)
+    return jax.tree_util.tree_map_with_path(wrap, tree)
+
+
+def to_shardings(specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

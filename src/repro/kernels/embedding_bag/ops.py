@@ -1,0 +1,50 @@
+"""Jitted public wrapper for embedding_bag.
+
+Normalizes ragged input (mask -> index clamp + zero weight), picks kernel vs
+reference path, and implements the sum/mean combiners.  The multi-field
+recsys layout ([batch, n_fields, L] against per-field vocab offsets in one
+stacked table) flattens to bags here.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag import ref
+from repro.kernels.embedding_bag.embedding_bag import embedding_bag_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("combiner", "use_kernel",
+                                             "interpret"))
+def embedding_bag(table, indices, weights=None, mask=None, *,
+                  combiner: str = "sum", use_kernel: bool = True,
+                  interpret: bool | None = None):
+    """out[b] = combine_l  weights[b,l] * table[indices[b,l]].
+
+    indices [B, L] int32; optional mask [B, L] bool (False = padding);
+    optional weights [B, L].  Returns [B, D] float32.
+    """
+    n_bags, bag = indices.shape
+    if weights is None:
+        weights = jnp.ones((n_bags, bag), jnp.float32)
+    if mask is not None:
+        weights = jnp.where(mask, weights, 0.0)
+        indices = jnp.where(mask, indices, 0)
+    indices = jnp.clip(indices, 0, table.shape[0] - 1)
+
+    if use_kernel:
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        out = embedding_bag_pallas(table, indices, weights,
+                                   interpret=interpret)
+    else:
+        out = ref.embedding_bag_ref(table, indices, weights)
+
+    if combiner == "mean":
+        counts = jnp.sum(weights != 0.0, axis=1, keepdims=True)
+        out = out / jnp.maximum(counts, 1.0)
+    elif combiner != "sum":
+        raise ValueError(f"unknown combiner {combiner!r}")
+    return out

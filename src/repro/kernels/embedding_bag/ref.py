@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for embedding_bag: gather + weighted segment reduce."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table, indices, weights):
+    """table [V, D]; indices/weights [n_bags, L] -> [n_bags, D] f32.
+
+    Invalid slots are encoded as (index=anything valid, weight=0).
+    """
+    rows = jnp.take(table, indices, axis=0)              # [B, L, D]
+    return jnp.einsum("bl,bld->bd", weights.astype(jnp.float32),
+                      rows.astype(jnp.float32))

@@ -1,0 +1,188 @@
+"""Pallas TPU kernel: canonical-segment merge — the paper's block-update op.
+
+Merges two canonical associative-array segments (sorted, unique, sentinel-
+padded) into one, combining colliding keys under the semiring, entirely in
+VMEM.  This is the layer-0 / layer-1 hot path of the hierarchy (Fig 2): cut
+selection sizes those layers so this merge's working set fits VMEM, which is
+the TPU re-derivation of the paper's "updates happen in fast memory".
+
+Hardware adaptation (DESIGN.md §2): CPU D4M uses pointer-walking sorted
+merges; TPU VPUs need data-independent control flow.  We use sorting
+*networks*:
+
+  phase A  bitonic MERGE     log2(N) compare-exchange stages
+           (concat sorted A with reversed sorted B = bitonic sequence)
+  phase B  segmented combine log2(N) Hillis-Steele shift stages; the run-last
+           element accumulates the semiring-sum of its duplicate run
+  phase C  non-last duplicates -> SENTINEL key / zero value
+  phase D  bitonic SORT      ~log2(N)^2/2 stages pushes sentinels to the end,
+           restoring canonical form (live prefix, sorted, unique)
+
+Every stage is a static reshape + flip + select: no gathers, no data-dependent
+branches, VPU/MXU-friendly.  Lexicographic (hi, lo) int32 key pairs avoid the
+int64 requirement of packed 64-bit keys.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+SENTINEL = np.int32(np.iinfo(np.int32).max)
+
+_COMBINE = {
+    "plus.times": jnp.add,
+    "max.plus": jnp.maximum,
+    "max.min": jnp.maximum,
+    "min.plus": jnp.minimum,
+}
+
+
+def _zero_for(sr_name: str, dtype) -> np.ndarray:
+    if sr_name == "plus.times":
+        return np.zeros((), dtype)
+    big = (np.iinfo(dtype).max if np.issubdtype(dtype, np.integer)
+           else np.asarray(np.inf, dtype))
+    small = (np.iinfo(dtype).min if np.issubdtype(dtype, np.integer)
+             else np.asarray(-np.inf, dtype))
+    return np.asarray(small if sr_name.startswith("max") else big, dtype)
+
+
+def _lex_gt(hi_a, lo_a, hi_b, lo_b):
+    return (hi_a > hi_b) | ((hi_a == hi_b) & (lo_a > lo_b))
+
+
+def _compare_exchange(hi, lo, val, stride: int, asc):
+    """One compare-exchange stage over pairs (i, i ^ stride).
+
+    The XOR-partner permutation for a power-of-two stride is a block swap,
+    expressible as reshape(-1, 2, stride) — static shapes only.
+    ``asc`` is a per-pair-row bool (np array broadcast to (rows, stride)) —
+    True rows order ascending, False descending.
+    """
+    n = hi.shape[0]
+    rows = n // (2 * stride)
+
+    def pair(x):
+        y = x.reshape(rows, 2, stride)
+        return y[:, 0, :], y[:, 1, :]
+
+    ha, hb = pair(hi)
+    la, lb = pair(lo)
+    va, vb = pair(val)
+    gt = _lex_gt(ha, la, hb, lb)
+    swap = gt if asc is True else jnp.where(asc, gt, ~gt)
+
+    def sel(swap, a, b):
+        na = jnp.where(swap, b, a)
+        nb = jnp.where(swap, a, b)
+        return jnp.stack([na, nb], axis=1).reshape(n)
+
+    return (sel(swap, ha, hb), sel(swap, la, lb), sel(swap, va, vb))
+
+
+def _bitonic_merge(hi, lo, val):
+    """Sort a bitonic sequence ascending: strides N/2 .. 1, all ascending."""
+    n = hi.shape[0]
+    stride = n // 2
+    while stride >= 1:
+        hi, lo, val = _compare_exchange(hi, lo, val, stride, True)
+        stride //= 2
+    return hi, lo, val
+
+
+def _bitonic_sort(hi, lo, val):
+    """Full bitonic sort (no pre-order assumed)."""
+    n = hi.shape[0]
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            rows = n // (2 * j)
+            # ascending iff bit k of the pair's base index is 0
+            base = jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0) * (2 * j)
+            asc = (base & k) == 0
+            hi, lo, val = _compare_exchange(hi, lo, val, j, asc)
+            j //= 2
+        k *= 2
+    return hi, lo, val
+
+
+def _shift_right(x, d: int, fill):
+    pad = jnp.full((d,), fill, x.dtype)
+    return jnp.concatenate([pad, x[:-d]])
+
+
+def _shift_left(x, d: int, fill):
+    pad = jnp.full((d,), fill, x.dtype)
+    return jnp.concatenate([x[d:], pad])
+
+
+def _merge_kernel(hi_a_ref, lo_a_ref, val_a_ref,
+                  hi_b_ref, lo_b_ref, val_b_ref,
+                  hi_out_ref, lo_out_ref, val_out_ref, nnz_ref,
+                  *, sr_name: str):
+    combine = _COMBINE[sr_name]
+    vdtype = val_a_ref.dtype
+    zero = _zero_for(sr_name, np.dtype(vdtype))
+
+    # --- phase A: bitonic merge of A ++ reverse(B) --------------------------
+    hi = jnp.concatenate([hi_a_ref[...], jnp.flip(hi_b_ref[...])])
+    lo = jnp.concatenate([lo_a_ref[...], jnp.flip(lo_b_ref[...])])
+    val = jnp.concatenate([val_a_ref[...], jnp.flip(val_b_ref[...])])
+    hi, lo, val = _bitonic_merge(hi, lo, val)
+
+    n = hi.shape[0]
+
+    # --- phase B: segmented combine; run-last ends with the run total ------
+    d = 1
+    while d < n:
+        same = (hi == _shift_right(hi, d, -1)) & (lo == _shift_right(lo, d, -1))
+        val = jnp.where(same, combine(val, _shift_right(val, d, zero)), val)
+        d *= 2
+
+    # --- phase C: keep run-last, blank duplicates ---------------------------
+    nxt_same = (hi == _shift_left(hi, 1, -1)) & (lo == _shift_left(lo, 1, -1))
+    keep = ~nxt_same
+    hi = jnp.where(keep, hi, SENTINEL)
+    lo = jnp.where(keep, lo, SENTINEL)
+    val = jnp.where(keep & (hi != SENTINEL), val, zero)
+
+    # --- phase D: compact via full bitonic sort -----------------------------
+    hi, lo, val = _bitonic_sort(hi, lo, val)
+
+    # canonical zero for padding (semiring zero, incl. +-inf variants)
+    val = jnp.where(hi != SENTINEL, val, zero)
+
+    hi_out_ref[...] = hi
+    lo_out_ref[...] = lo
+    val_out_ref[...] = val
+    nnz_ref[0] = jnp.sum((hi != SENTINEL).astype(jnp.int32))
+
+
+def merge_pallas(hi_a, lo_a, val_a, hi_b, lo_b, val_b, *,
+                 sr_name: str = "plus.times", interpret: bool = True):
+    """Raw pallas_call wrapper; inputs must be canonical segments whose total
+    capacity is a power of two (ops.py handles padding)."""
+    n = hi_a.shape[0] + hi_b.shape[0]
+    assert n & (n - 1) == 0, f"total capacity must be a power of 2, got {n}"
+    kernel = functools.partial(_merge_kernel, sr_name=sr_name)
+    out_shapes = (
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+        jax.ShapeDtypeStruct((n,), val_a.dtype),
+        jax.ShapeDtypeStruct((1,), jnp.int32),
+    )
+    vmem = pl.BlockSpec(memory_space=pltpu.VMEM)
+    return pl.pallas_call(
+        kernel,
+        out_shape=out_shapes,
+        in_specs=[vmem] * 6,
+        out_specs=(vmem, vmem, vmem,
+                   pl.BlockSpec(memory_space=pltpu.SMEM)),
+        interpret=interpret,
+    )(hi_a, lo_a, val_a, hi_b, lo_b, val_b)

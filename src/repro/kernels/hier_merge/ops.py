@@ -1,0 +1,72 @@
+"""Jitted public wrapper for the hier_merge kernel.
+
+Handles capacity padding (bitonic networks need power-of-two totals), output
+slicing to the destination layer capacity, and overflow accounting; dispatches
+to the Pallas kernel on TPU and to interpret mode elsewhere.
+
+VMEM budget: a merge of total capacity N touches 3 key/value arrays of
+12 bytes/entry plus stage temporaries (~4x) — N = 64K stays well under a
+v5e core's ~128 MiB of VMEM-addressable working set headroom and is the
+supported kernel ceiling; the hierarchy's cut selection keeps the *hot*
+merges (layers 0-1) at N <= 16K.  Larger (rare, amortized) spill merges fall
+back to the XLA-sort reference path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.hier_merge import ref
+from repro.kernels.hier_merge.hier_merge import SENTINEL, merge_pallas
+
+MAX_KERNEL_CAPACITY = 1 << 16
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << (n - 1).bit_length()
+
+
+def _pad_canonical(hi, lo, val, cap: int, zero):
+    pad = cap - hi.shape[0]
+    if pad == 0:
+        return hi, lo, val
+    return (jnp.concatenate([hi, jnp.full((pad,), SENTINEL, jnp.int32)]),
+            jnp.concatenate([lo, jnp.full((pad,), SENTINEL, jnp.int32)]),
+            jnp.concatenate([val, jnp.full((pad,), zero, val.dtype)]))
+
+
+@functools.partial(jax.jit, static_argnames=("out_capacity", "sr_name",
+                                             "use_kernel", "interpret"))
+def merge(hi_a, lo_a, val_a, hi_b, lo_b, val_b, *, out_capacity: int,
+          sr_name: str = "plus.times", use_kernel: bool = True,
+          interpret: bool | None = None):
+    """Merge canonical segments a (+) b into a canonical segment of
+    ``out_capacity``; returns (hi, lo, val, nnz, overflow)."""
+    total = hi_a.shape[0] + hi_b.shape[0]
+    n = _next_pow2(total)
+    zero = ref._zero_for(sr_name, np.dtype(val_a.dtype))
+
+    if use_kernel and n <= MAX_KERNEL_CAPACITY:
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        # pad the B side; sentinel tail keeps it canonical
+        hi_b2, lo_b2, val_b2 = _pad_canonical(
+            hi_b, lo_b, val_b, n - hi_a.shape[0], zero)
+        hi, lo, val, nnz = merge_pallas(
+            hi_a, lo_a, val_a, hi_b2, lo_b2, val_b2,
+            sr_name=sr_name, interpret=interpret)
+    else:
+        hi, lo, val, nnz = ref.merge_ref(hi_a, lo_a, val_a, hi_b, lo_b, val_b,
+                                         sr_name=sr_name)
+    nnz = nnz[0]
+
+    if out_capacity >= hi.shape[0]:
+        hi, lo, val = _pad_canonical(hi, lo, val, out_capacity, zero)
+        overflow = jnp.zeros((), jnp.int32)
+    else:
+        hi, lo, val = hi[:out_capacity], lo[:out_capacity], val[:out_capacity]
+        overflow = jnp.maximum(nnz - out_capacity, 0)
+    return hi, lo, val, jnp.minimum(nnz, out_capacity), overflow

@@ -1,0 +1,60 @@
+"""Pure-jnp oracle for the hier_merge kernel.
+
+Independent implementation (lexsort + segment reduction) against which the
+sorting-network kernel is validated across shape/dtype/semiring sweeps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SENTINEL = np.int32(np.iinfo(np.int32).max)
+
+_SEGMENT = {
+    "plus.times": jax.ops.segment_sum,
+    "max.plus": jax.ops.segment_max,
+    "max.min": jax.ops.segment_max,
+    "min.plus": jax.ops.segment_min,
+}
+
+
+def _zero_for(sr_name: str, dtype) -> np.ndarray:
+    if sr_name == "plus.times":
+        return np.zeros((), dtype)
+    big = (np.iinfo(dtype).max if np.issubdtype(dtype, np.integer)
+           else np.asarray(np.inf, dtype))
+    small = (np.iinfo(dtype).min if np.issubdtype(dtype, np.integer)
+             else np.asarray(-np.inf, dtype))
+    return np.asarray(small if sr_name.startswith("max") else big, dtype)
+
+
+def merge_ref(hi_a, lo_a, val_a, hi_b, lo_b, val_b, *,
+              sr_name: str = "plus.times"):
+    """Merge two canonical segments; returns (hi, lo, val, nnz[1])."""
+    hi = jnp.concatenate([hi_a, hi_b])
+    lo = jnp.concatenate([lo_a, lo_b])
+    val = jnp.concatenate([val_a, val_b])
+    n = hi.shape[0]
+
+    order = jnp.lexsort((lo, hi))
+    hi, lo, val = hi[order], lo[order], val[order]
+
+    first = jnp.concatenate([
+        jnp.ones((1,), bool),
+        (hi[1:] != hi[:-1]) | (lo[1:] != lo[:-1]),
+    ])
+    seg = jnp.cumsum(first) - 1
+    combined = _SEGMENT[sr_name](val, seg, num_segments=n,
+                                 indices_are_sorted=True)
+
+    out_hi = jnp.full((n,), SENTINEL, jnp.int32).at[seg].set(hi)
+    out_lo = jnp.full((n,), SENTINEL, jnp.int32).at[seg].set(lo)
+    n_unique = jnp.sum(first & (hi != SENTINEL)).astype(jnp.int32)
+
+    zero = _zero_for(sr_name, np.dtype(val.dtype))
+    live = jnp.arange(n) < n_unique
+    out_hi = jnp.where(live, out_hi, SENTINEL)
+    out_lo = jnp.where(live, out_lo, SENTINEL)
+    out_val = jnp.where(live, combined.astype(val.dtype), zero)
+    return out_hi, out_lo, out_val, n_unique[None]

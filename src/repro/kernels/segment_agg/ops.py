@@ -1,0 +1,63 @@
+"""Jitted public wrapper for segment_agg.
+
+Takes an *unsorted* (seg_id, message) edge set, sorts by segment, computes
+per-node-tile edge offsets (searchsorted), pads to block granularity, and
+dispatches to the Pallas kernel (or segment_sum reference path).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.segment_agg import ref
+from repro.kernels.segment_agg.segment_agg import segment_sum_pallas
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "tn", "kb",
+                                             "use_kernel", "interpret",
+                                             "assume_sorted"))
+def segment_sum(messages, seg_ids, *, num_segments: int, tn: int = 128,
+                kb: int = 128, use_kernel: bool = True,
+                interpret: bool | None = None, assume_sorted: bool = False):
+    """Segment-sum messages [E, D] by seg_ids [E] -> [num_segments, D] f32.
+
+    seg_ids outside [0, num_segments) are treated as padding and dropped.
+    """
+    e, d = messages.shape
+    if not use_kernel:
+        return ref.segment_sum_ref(messages, seg_ids, num_segments)[:num_segments]
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    valid_cap = jnp.int32(num_segments)
+    seg_clip = jnp.where((seg_ids >= 0) & (seg_ids < valid_cap),
+                         seg_ids, valid_cap)
+    if assume_sorted:
+        seg_sorted, msg_sorted = seg_clip, messages
+    else:
+        order = jnp.argsort(seg_clip)
+        seg_sorted = seg_clip[order]
+        msg_sorted = messages[order]
+
+    num_tiles = _ceil_to(num_segments, tn) // tn
+    e_pad = _ceil_to(e, kb) + kb
+    pad = e_pad - e
+    seg_pad = jnp.concatenate(
+        [seg_sorted, jnp.full((pad,), num_tiles * tn, jnp.int32)])
+    msg_pad = jnp.concatenate(
+        [msg_sorted, jnp.zeros((pad, d), messages.dtype)])
+
+    boundaries = jnp.arange(num_tiles + 1, dtype=jnp.int32) * tn
+    tile_starts = jnp.searchsorted(seg_pad, boundaries, side="left"
+                                   ).astype(jnp.int32)
+
+    out = segment_sum_pallas(msg_pad, seg_pad, tile_starts, num_tiles,
+                             tn=tn, kb=kb, interpret=interpret)
+    return out[:num_segments]

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for segment_agg: jax.ops.segment_sum."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum_ref(messages, seg_ids, num_segments: int):
+    """messages [E, D]; seg_ids [E] (>= num_segments rows are dropped)."""
+    return jax.ops.segment_sum(
+        messages.astype(jnp.float32), seg_ids, num_segments=num_segments)

@@ -1,0 +1,483 @@
+"""Dry-run cell builders: (arch x input-shape x mesh) -> jax.stages.Lowered.
+
+One builder per family.  Every builder returns
+    (lowered, meta)
+where ``lowered = jax.jit(step, in_shardings=..., out_shardings=...)
+.lower(*abstract_args)`` — no real allocation ever happens (inputs are
+ShapeDtypeStructs; params come from ``jax.eval_shape`` over init).
+
+``meta`` carries what the roofline needs: token/edge/row counts and
+MODEL_FLOPS estimates.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import (D4M_SHAPES, GNN_SHAPES, LM_SHAPES, RECSYS_SHAPES,
+                           family, get_config)
+from repro.distribution.sharding import (lm_param_specs, gnn_param_specs,
+                                         recsys_param_specs, make_policy,
+                                         to_shardings, use_policy)
+from repro.optim.adamw import AdamWConfig, adamw_init
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+class SkipCell(Exception):
+    """Cell documented as skipped (e.g. long_500k on full attention)."""
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _ns(mesh: Mesh, *axes) -> NamedSharding:
+    return NamedSharding(mesh, P(*axes))
+
+
+def _batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _all_axes(mesh: Mesh):
+    return tuple(mesh.axis_names)
+
+
+def _replicate(mesh: Mesh, tree):
+    return jax.tree.map(lambda _: _ns(mesh), tree)
+
+
+def _opt_shardings(mesh: Mesh, param_sh):
+    return dict(m=param_sh, v=param_sh, count=_ns(mesh))
+
+
+def _bsh(mesh: Mesh, bax, arr):
+    """Batch sharding on dim 0 when divisible, else replicated."""
+    import math as _m
+    size = _m.prod(mesh.shape[a] for a in bax)
+    if arr.shape[0] % size == 0:
+        return _ns(mesh, bax, *([None] * (arr.ndim - 1)))
+    return _ns(mesh, *([None] * arr.ndim))
+
+
+# ------------------------------------------------------------------- LM -----
+
+def _lm_cell(arch: str, shape: str, mesh: Mesh, variant: str = "baseline"
+             ) -> Tuple[Any, Dict]:
+    from repro.models import transformer as tf
+
+    cfg = get_config(arch)
+    if variant != "baseline":
+        cfg = apply_variant(cfg, variant)
+    info = LM_SHAPES[shape]
+    if info.get("requires_subquadratic"):
+        raise SkipCell(
+            f"{arch} is full softmax attention (quadratic prefill); "
+            f"long_500k requires sub-quadratic attention — documented skip "
+            f"(DESIGN.md §Arch-applicability)")
+    policy = make_policy(mesh, cfg.layout)
+    B, S = info["batch"], info["seq"]
+    dt = jnp.dtype(cfg.dtype)
+
+    params_abs = jax.eval_shape(lambda k: tf.init(k, cfg),
+                                jax.random.PRNGKey(0))
+    param_sh = to_shardings(lm_param_specs(params_abs, cfg, policy), mesh)
+    batch_sp = _ns(mesh, policy.batch_axes)
+    n_tokens = B * S
+
+    meta = dict(arch=arch, shape=shape, family="lm", kind=info["kind"],
+                n_params=cfg.n_params, n_active=cfg.n_active_params,
+                tokens=n_tokens, dtype=cfg.dtype, variant=variant)
+
+    with use_policy(policy):
+        if info["kind"] == "train":
+            opt_abs = jax.eval_shape(adamw_init, params_abs)
+            opt_sh = _opt_shardings(mesh, param_sh)
+            batch_abs = dict(tokens=sds((B, S), I32),
+                             labels=sds((B, S), I32))
+            batch_sh = dict(tokens=batch_sp, labels=batch_sp)
+            step = tf.make_train_step(cfg, AdamWConfig())
+            jitted = jax.jit(step, donate_argnums=(0, 1),
+                             in_shardings=(param_sh, opt_sh, batch_sh),
+                             out_shardings=(param_sh, opt_sh, None))
+            lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+            meta["model_flops"] = 6.0 * cfg.n_active_params * n_tokens
+        elif info["kind"] == "prefill":
+            import dataclasses as _dc
+            bax_size = 1
+            for a in policy.batch_axes:
+                bax_size *= mesh.shape[a]
+            if cfg.prefill_microbatch:
+                eff_mb = min(B, max(cfg.prefill_microbatch, bax_size))
+                cfg = _dc.replace(cfg, prefill_microbatch=eff_mb)
+            tokens_abs = sds((B, S), I32)
+            fn = partial(tf.prefill, cfg=cfg)
+
+            def run(params, tokens):
+                return fn(params, tokens)
+
+            cache_sh = lm_cache_spec(cfg, mesh, policy, S)
+            jitted = jax.jit(
+                run, in_shardings=(param_sh, _ns(mesh, policy.batch_axes)),
+                out_shardings=((_ns(mesh, policy.batch_axes), cache_sh,
+                                _ns(mesh))))
+            lowered = jitted.lower(params_abs, tokens_abs)
+            meta["model_flops"] = 2.0 * cfg.n_active_params * n_tokens
+        elif info["kind"] == "decode":
+            cache_abs = jax.eval_shape(lambda: tf.init_cache(cfg, B, S))
+            cache_sh = lm_cache_spec(cfg, mesh, policy, S)
+            token_abs = sds((B, 1), I32)
+
+            def run(params, token, cache, cache_len):
+                return tf.decode_step(params, token, cache, cache_len, cfg)
+
+            jitted = jax.jit(
+                run, donate_argnums=(2,),
+                in_shardings=(param_sh, batch_sp, cache_sh, _ns(mesh)),
+                out_shardings=(batch_sp, cache_sh))
+            lowered = jitted.lower(params_abs, token_abs, cache_abs,
+                                   sds((), I32))
+            meta["model_flops"] = 2.0 * cfg.n_active_params * B \
+                + 2.0 * _kv_read_flops(cfg, B, S)
+            meta["tokens"] = B
+        else:
+            raise ValueError(info["kind"])
+    return lowered, meta
+
+
+def lm_cache_spec(cfg, mesh, policy, S: int):
+    """KV-cache NamedShardings [L, B, ...]: batch always; model axis on the
+    kv-head dim when divisible, else on the sequence dim (softmax over a
+    sequence-sharded cache partial-reduces per shard — GSPMD handles it)."""
+    bax = policy.batch_axes
+    tp = policy.tp_axis
+    tpsize = mesh.shape[tp] if tp else 1
+    s_ax = tp if tp and S % tpsize == 0 else None
+    if cfg.attn == "mla":
+        sh = _ns(mesh, None, bax, s_ax, None)
+        return dict(c_kv=sh, k_rope=sh)
+    if tp and cfg.n_kv_heads % tpsize == 0:
+        sh = _ns(mesh, None, bax, tp, None, None)
+    else:
+        sh = _ns(mesh, None, bax, None, s_ax, None)
+    return dict(k=sh, v=sh)
+
+
+def _kv_read_flops(cfg, B, S):
+    """Attention score+value FLOPs against an S-deep cache (per new token)."""
+    if cfg.attn == "mla":
+        per_tok = cfg.n_heads * (cfg.kv_lora_rank + cfg.qk_rope_dim) * 2
+    else:
+        per_tok = cfg.n_heads * cfg.d_head * 2
+    return cfg.n_layers * B * S * per_tok
+
+
+# ------------------------------------------------------------------ GNN -----
+
+def _pad256(n: int) -> int:
+    """Pad node/edge/candidate counts to 2048 so these dims shard evenly
+    over every production mesh (up to all 512 devices).  Real pipelines pad
+    identically: extra edges carry dst=n_nodes (dropped by segment_sum),
+    extra nodes carry zero features."""
+    return -(-n // 2048) * 2048
+
+
+def scaled_cuts(cuts, block: int, growth: int = 8):
+    """Cut schedule adapted to the block size (paper: cuts are tunable).
+    Keeps cuts strictly increasing when the configured cuts are smaller
+    than the update block."""
+    out = []
+    for i, c in enumerate(cuts):
+        lo = 2 * block * (growth ** i)
+        c = max(c, lo)
+        if out and c <= out[-1]:
+            c = out[-1] * growth
+        out.append(c)
+    return tuple(out)
+
+
+def _gnn_batch_abs(cfg, info, n_out):
+    kind = info["kind"]
+    if kind == "full":
+        n, e = _pad256(info["n_nodes"]), _pad256(info["n_edges"])
+        batch = dict(node_feat=sds((n, info["d_feat"]), F32),
+                     edge_src=sds((e,), I32), edge_dst=sds((e,), I32))
+        if cfg.kind == "graphcast":
+            batch["targets"] = sds((n, n_out), F32)
+        else:
+            batch["labels"] = sds((n,), I32)
+        return batch, 0
+    if kind == "sampled":
+        from repro.data.graphs import flow_sizes
+        n, e = flow_sizes(info["batch_nodes"], info["fanouts"])
+        batch = dict(node_feat=sds((n, info["d_feat"]), F32),
+                     edge_src=sds((e,), I32), edge_dst=sds((e,), I32))
+        if cfg.kind == "graphcast":
+            batch["targets"] = sds((n, n_out), F32)
+        else:
+            batch["labels"] = sds((n,), I32)
+        return batch, info["batch_nodes"]
+    if kind == "batched":
+        g, nn, ee = info["batch"], info["n_nodes"], info["n_edges"]
+        n, e = g * nn, g * ee
+        batch = dict(node_feat=sds((n, info["d_feat"]), F32),
+                     edge_src=sds((e,), I32), edge_dst=sds((e,), I32),
+                     graph_ids=sds((n,), I32))
+        if cfg.kind == "graphcast":
+            batch["targets"] = sds((n, n_out), F32)
+        else:
+            batch["labels"] = sds((g,), I32)
+        return batch, 0
+    raise ValueError(kind)
+
+
+def _gnn_cell(arch: str, shape: str, mesh: Mesh, variant: str = "baseline"
+              ) -> Tuple[Any, Dict]:
+    from repro.models import gnn
+
+    cfg = get_config(arch)
+    if variant != "baseline":
+        cfg = apply_variant(cfg, variant)
+    info = GNN_SHAPES[shape]
+    # GNNs have no TP dim: folding the model axis into data parallelism
+    # shards nodes/edges over ALL devices (8-16x less residency per device
+    # at ogb_products scale than a (data,)-only batch sharding).
+    policy = make_policy(mesh, "dp")
+    n_out = cfg.n_vars if cfg.kind == "graphcast" else info["n_classes"]
+    task = gnn.task_for_shape(info["kind"], cfg.kind)
+    batch_abs, seed_count = _gnn_batch_abs(cfg, info, n_out)
+    # graph task reads labels per graph; node task per node
+    if cfg.kind == "graphcast" and info["kind"] == "batched":
+        task = "regress"
+
+    params_abs = jax.eval_shape(
+        lambda k: gnn.init(k, cfg, info["d_feat"], n_out),
+        jax.random.PRNGKey(0))
+    param_sh = to_shardings(gnn_param_specs(params_abs, cfg, policy), mesh)
+    opt_abs = jax.eval_shape(adamw_init, params_abs)
+    opt_sh = _opt_shardings(mesh, param_sh)
+    bax = policy.batch_axes
+    batch_sh = {k: _bsh(mesh, bax, v) for k, v in batch_abs.items()}
+    step = gnn.make_train_step(cfg, AdamWConfig(), task, seed_count)
+    with use_policy(policy):
+        jitted = jax.jit(step, donate_argnums=(0, 1),
+                         in_shardings=(param_sh, opt_sh, batch_sh),
+                         out_shardings=(param_sh, opt_sh, None))
+        lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+
+    e = batch_abs["edge_src"].shape[0]
+    n = batch_abs["node_feat"].shape[0]
+    d = cfg.d_hidden
+    # message-passing model flops: per edge gather+reduce (2d) + per node
+    # transforms (varies by kind; use 6*d^2 per node per layer as the GEMM
+    # core), x3 for fwd+bwd
+    meta = dict(arch=arch, shape=shape, family="gnn", kind=info["kind"],
+                n_nodes=n, n_edges=e, variant=variant,
+                model_flops=3.0 * cfg.n_layers * (2.0 * e * d
+                                                  + 6.0 * n * d * d),
+                tokens=n, dtype=cfg.dtype)
+    return lowered, meta
+
+
+# --------------------------------------------------------------- recsys -----
+
+def _recsys_cell(arch: str, shape: str, mesh: Mesh,
+                 variant: str = "baseline") -> Tuple[Any, Dict]:
+    from repro.models import dcn
+
+    cfg = get_config(arch)
+    if variant != "baseline":
+        cfg = apply_variant(cfg, variant)
+    info = RECSYS_SHAPES[shape]
+    policy = make_policy(mesh, "dp")   # no TP dim; batch over every axis
+    B = info["batch"]
+    bax = policy.batch_axes
+
+    params_abs = jax.eval_shape(lambda k: dcn.init(k, cfg),
+                                jax.random.PRNGKey(0))
+    param_sh = to_shardings(recsys_param_specs(params_abs, cfg, policy),
+                            mesh)
+    batch_abs = dict(dense=sds((B, cfg.n_dense), F32),
+                     sparse=sds((B, cfg.n_sparse), I32),
+                     labels=sds((B,), F32))
+    batch_sh = {k: _bsh(mesh, bax, v) for k, v in batch_abs.items()}
+
+    d0 = cfg.d_interact
+    mlp_flops = sum(a * b for a, b in zip((d0,) + cfg.mlp, cfg.mlp))
+    fwd_flops_per_ex = 2.0 * (cfg.n_cross_layers * d0 * d0 + mlp_flops)
+    meta = dict(arch=arch, shape=shape, family="recsys", kind=info["kind"],
+                rows=cfg.total_rows, tokens=B, dtype=cfg.dtype,
+                variant=variant)
+
+    with use_policy(policy):
+        if info["kind"] == "train":
+            if variant == "hier":
+                # the paper's technique: hierarchical sparse embed grads
+                hstate_abs = jax.eval_shape(
+                    lambda: dcn.hier_embed_init(cfg, B))
+                rest_abs = {k: v for k, v in params_abs.items()
+                            if k != "table"}
+                opt_abs = jax.eval_shape(adamw_init, rest_abs)
+                rest_sh = {k: v for k, v in param_sh.items() if k != "table"}
+                opt_sh = _opt_shardings(mesh, rest_sh)
+                hs_sh = jax.tree.map(lambda _: _ns(mesh), hstate_abs)
+                step = dcn.make_train_step_hier(cfg, AdamWConfig())
+                jitted = jax.jit(
+                    step, donate_argnums=(0, 1, 2),
+                    in_shardings=(param_sh, opt_sh, hs_sh, batch_sh),
+                    out_shardings=(param_sh, opt_sh, hs_sh, None))
+                lowered = jitted.lower(params_abs, opt_abs, hstate_abs,
+                                       batch_abs)
+            else:
+                opt_abs = jax.eval_shape(adamw_init, params_abs)
+                opt_sh = _opt_shardings(mesh, param_sh)
+                step = dcn.make_train_step(cfg, AdamWConfig())
+                jitted = jax.jit(step, donate_argnums=(0, 1),
+                                 in_shardings=(param_sh, opt_sh, batch_sh),
+                                 out_shardings=(param_sh, opt_sh, None))
+                lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+            meta["model_flops"] = 3.0 * B * fwd_flops_per_ex
+        elif info["kind"] == "serve":
+            serve_abs = {k: v for k, v in batch_abs.items()
+                         if k != "labels"}
+            serve_sh = {k: v for k, v in batch_sh.items() if k != "labels"}
+
+            def run(params, batch):
+                return dcn.serve_scores(params, batch, cfg)
+
+            jitted = jax.jit(run, in_shardings=(param_sh, serve_sh),
+                             out_shardings=_ns(mesh, bax))
+            lowered = jitted.lower(params_abs, serve_abs)
+            meta["model_flops"] = B * fwd_flops_per_ex
+        elif info["kind"] == "retrieval":
+            nc = _pad256(info["n_candidates"])   # 1M -> 256-divisible
+            cand_abs = sds((nc, cfg.mlp[-1]), F32)
+            cand_sh = _ns(mesh, _all_axes(mesh), None)
+            # batch=1 query cannot shard: replicate the query-side args
+            q_sh = dict(dense=_ns(mesh), sparse=_ns(mesh))
+
+            def run(params, batch, cands):
+                return dcn.retrieval_topk(params, batch, cands, cfg, k=100)
+
+            jitted = jax.jit(
+                run, in_shardings=(param_sh, q_sh, cand_sh),
+                out_shardings=None)
+            lowered = jitted.lower(
+                params_abs, {k: batch_abs[k] for k in ("dense", "sparse")},
+                cand_abs)
+            meta["model_flops"] = B * fwd_flops_per_ex \
+                + 2.0 * B * nc * cfg.mlp[-1]
+        else:
+            raise ValueError(info["kind"])
+    return lowered, meta
+
+
+# ------------------------------------------------------------------ D4M -----
+
+def _d4m_cell(arch: str, shape: str, mesh: Mesh, variant: str = "baseline"
+              ) -> Tuple[Any, Dict]:
+    from repro.core import distributed
+
+    cfg = get_config(arch)
+    if variant != "baseline":
+        cfg = apply_variant(cfg, variant)
+    info = D4M_SHAPES[shape]
+    axes = _all_axes(mesh)
+    n_dev = math.prod(mesh.shape.values())
+    n_inst = n_dev * cfg.instances_per_device
+
+    if info["kind"] == "ingest":
+        block = info["block_size"]
+        blocks = info["blocks"]
+        # scale the cuts with the block size (paper: cuts are tunable)
+        cuts = scaled_cuts(cfg.cuts, block)
+        states_abs = jax.eval_shape(
+            lambda: distributed.create_instances(n_inst, cuts, block))
+        stream_abs = (sds((n_inst, blocks, block), I32),
+                      sds((n_inst, blocks, block), I32),
+                      sds((n_inst, blocks, block), F32))
+        fn = distributed.sharded_ingest_fn(mesh, axes, lazy_l0=cfg.lazy_l0)
+        lowered = fn.lower(states_abs, *stream_abs)
+        updates = n_inst * blocks * block
+        # model flops: sort-network + segment-combine per update ~
+        # O(log^2 C0) compare-exchange flops; report raw update count too
+        c0 = cuts[0] + block
+        meta = dict(arch=arch, shape=shape, family="d4m", kind="ingest",
+                    n_instances=n_inst, updates=updates, tokens=updates,
+                    model_flops=float(updates) * (math.log2(c0) ** 2),
+                    dtype=cfg.dtype, variant=variant)
+        return lowered, meta
+    if info["kind"] == "query":
+        states_abs = jax.eval_shape(
+            lambda: distributed.create_instances(
+                n_inst, cfg.cuts, cfg.block_size))
+        num_rows = 1 << cfg.rmat_scale
+        fn = distributed.global_degree_histogram_fn(
+            mesh, axes, num_rows=num_rows, num_bins=32)
+        lowered = fn.lower(states_abs)
+        meta = dict(arch=arch, shape=shape, family="d4m", kind="query",
+                    n_instances=n_inst, tokens=n_inst,
+                    model_flops=float(n_inst) * num_rows,
+                    dtype=cfg.dtype, variant=variant)
+        return lowered, meta
+    raise ValueError(info["kind"])
+
+
+# ------------------------------------------------------------- dispatcher ---
+
+_BUILDERS = dict(lm=_lm_cell, gnn=_gnn_cell, recsys=_recsys_cell,
+                 d4m=_d4m_cell)
+
+
+def apply_variant(cfg, variant: str):
+    """Named config tweaks used by the §Perf hillclimb (see EXPERIMENTS.md)."""
+    import dataclasses as dc
+    if variant == "baseline":
+        return cfg
+    for kv in variant.split(","):
+        k, v = kv.split("=")
+        field_type = type(getattr(cfg, k))
+        if field_type is bool:
+            v = v in ("1", "true", "True")
+        elif field_type is tuple:
+            v = tuple(int(x) for x in v.split("+"))
+        else:
+            v = field_type(v)
+        cfg = dc.replace(cfg, **{k: v})
+    return cfg
+
+
+def lower_cell(arch: str, shape: str, mesh: Mesh,
+               variant: str = "baseline") -> Tuple[Any, Dict]:
+    fam = family(arch)
+    shapes = dict(lm=LM_SHAPES, gnn=GNN_SHAPES, recsys=RECSYS_SHAPES,
+                  d4m=D4M_SHAPES)[fam]
+    if shape not in shapes:
+        raise ValueError(f"{shape!r} is not a {fam} shape "
+                         f"({sorted(shapes)})")
+    return _BUILDERS[fam](arch, shape, mesh, variant)
+
+
+def all_cells():
+    """The assigned 40 cells (incl. documented skips) + d4m extras."""
+    from repro.configs import list_archs
+    cells = []
+    for arch in list_archs("lm"):
+        for shape in LM_SHAPES:
+            cells.append((arch, shape))
+    for arch in list_archs("gnn"):
+        for shape in GNN_SHAPES:
+            cells.append((arch, shape))
+    for arch in list_archs("recsys"):
+        for shape in RECSYS_SHAPES:
+            cells.append((arch, shape))
+    for shape in D4M_SHAPES:
+        cells.append(("d4m-stream", shape))
+    return cells

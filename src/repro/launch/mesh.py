@@ -1,0 +1,43 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS before first init.
+
+Topology (TPU v5e pods):
+  single pod : (16, 16)    axes ("data", "model")   = 256 chips
+  two pods   : (2, 16, 16) axes ("pod", "data", "model") = 512 chips
+
+``data`` is the FSDP axis, ``model`` the TP/EP axis, ``pod`` pure DP whose
+only cross-pod traffic is the per-step gradient all-reduce.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) == need:
+        return jax.make_mesh(shape, axes)
+    if len(devices) > need:                     # e.g. 512 host devices,
+        import numpy as np                      # single-pod mesh wanted
+        arr = np.asarray(devices[:need]).reshape(shape)
+        return jax.sharding.Mesh(arr, axes)
+    raise RuntimeError(
+        f"production mesh {shape} needs {need} devices, have "
+        f"{len(devices)} — run under "
+        f"XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+        f"(launch/dryrun.py does this for you)")
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for subprocess tests (forced host device count)."""
+    import numpy as np
+    need = math.prod(shape)
+    devices = jax.devices()[:need]
+    return jax.sharding.Mesh(np.asarray(devices).reshape(shape), axes)

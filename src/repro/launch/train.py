@@ -1,0 +1,252 @@
+"""Fault-tolerant training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --smoke \
+        --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt --ckpt-every 10
+
+Production posture demonstrated end-to-end (and exercised by tests):
+  * async step-granular checkpoints (params + opt + data cursor), atomic
+    on disk, auto-GC'd;
+  * resume: ``--resume`` restarts from the latest complete checkpoint and
+    reproduces the exact no-failure loss trajectory (the data cursor folds
+    the step index into the PRNG key — determinism across restarts);
+  * failure injection: ``--fail-at-step N`` raises mid-run; the supervisor
+    loop catches, restores, and continues — the same code path a fleet
+    controller drives on real node loss;
+  * straggler mitigation: per-step deadline EMA (runtime/straggler.py);
+    persistent stragglers escalate to the failure path;
+  * cross-pod gradient compression (--compress int8|topk) with error
+    feedback — the compress->wire->decompress roundtrip runs in-step, so
+    the numerics the pods would see are exercised end to end;
+  * hierarchical sparse embedding-grad accumulation for recsys
+    (--hier-embed): the paper's technique as an optimizer feature.
+
+Every family's adapter exposes the same contract:
+    state0, step(state, batch) -> (state, metrics), data(step) -> batch
+so checkpoints, failure recovery, and the supervisor loop are family-
+agnostic.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore
+from repro.configs import family, get_config, get_smoke_config
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.compression import CompressionConfig, ef_init, roundtrip
+from repro.runtime.straggler import StragglerEvicted, StragglerMonitor
+
+
+class InjectedFailure(RuntimeError):
+    pass
+
+
+def _lm_setup(cfg, args):
+    from repro.data.synthetic import token_batch
+    from repro.models import transformer as tf
+
+    key = jax.random.PRNGKey(args.seed)
+    params = tf.init(key, cfg)
+    opt_cfg = AdamWConfig(lr=args.lr)
+
+    if args.compress:
+        comp = CompressionConfig(args.compress)
+        grad_fn = jax.value_and_grad(partial(tf.loss_fn, cfg=cfg),
+                                     has_aux=True)
+
+        @jax.jit
+        def step_fn(state, batch):
+            (loss, m), g = grad_fn(state["params"], batch)
+            # error-feedback compression: what crosses the pod link
+            g, err = roundtrip(g, state["err"], comp)
+            p, o, gnorm = adamw_update(g, state["opt"], state["params"],
+                                       opt_cfg)
+            return dict(params=p, opt=o, err=err), dict(m, gnorm=gnorm)
+
+        state0 = dict(params=params, opt=adamw_init(params),
+                      err=ef_init(params))
+    else:
+        raw = tf.make_train_step(cfg, opt_cfg)
+
+        @jax.jit
+        def step_fn(state, batch):
+            p, o, m = raw(state["params"], state["opt"], batch)
+            return dict(params=p, opt=o), m
+
+        state0 = dict(params=params, opt=adamw_init(params))
+
+    def data(step):
+        return token_batch(jax.random.fold_in(
+            jax.random.PRNGKey(args.seed + 1), step),
+            args.batch, args.seq, cfg.vocab)
+
+    return state0, step_fn, data
+
+
+def _gnn_setup(cfg, args):
+    from repro.data import graphs as G
+    from repro.models import gnn
+
+    key = jax.random.PRNGKey(args.seed)
+    n_classes = 8
+    g = G.random_graph(key, n_nodes=max(args.batch * 16, 256),
+                       n_edges=max(args.batch * 64, 1024),
+                       d_feat=32, n_classes=n_classes)
+    n_out = cfg.n_vars if cfg.kind == "graphcast" else n_classes
+    params = gnn.init(key, cfg, d_feat=32, n_out=n_out)
+    task = "regress" if cfg.kind == "graphcast" else "node"
+    g = dict(g)
+    if task == "regress":
+        g["targets"] = jax.random.normal(
+            key, (g["node_feat"].shape[0], n_out))
+    raw = gnn.make_train_step(cfg, AdamWConfig(lr=args.lr), task)
+
+    @jax.jit
+    def step_fn(state, batch):
+        p, o, m = raw(state["params"], state["opt"], batch)
+        return dict(params=p, opt=o), m
+
+    return (dict(params=params, opt=adamw_init(params)), step_fn,
+            lambda step: g)
+
+
+def _recsys_setup(cfg, args):
+    from repro.data.synthetic import recsys_batch
+    from repro.models import dcn
+
+    key = jax.random.PRNGKey(args.seed)
+    params = dcn.init(key, cfg)
+    if args.hier_embed:
+        raw = dcn.make_train_step_hier(cfg, AdamWConfig(lr=args.lr))
+        hstate = dcn.hier_embed_init(cfg, args.batch,
+                                     cuts=(1024, 8192, 65536))
+        rest = {k: v for k, v in params.items() if k != "table"}
+
+        @jax.jit
+        def step_fn(state, batch):
+            p, o, h, m = raw(state["params"], state["opt"], state["hier"],
+                             batch)
+            return dict(params=p, opt=o, hier=h), m
+
+        state0 = dict(params=params, opt=adamw_init(rest), hier=hstate)
+    else:
+        raw = dcn.make_train_step(cfg, AdamWConfig(lr=args.lr))
+
+        @jax.jit
+        def step_fn(state, batch):
+            p, o, m = raw(state["params"], state["opt"], batch)
+            return dict(params=p, opt=o), m
+
+        state0 = dict(params=params, opt=adamw_init(params))
+
+    def data(step):
+        return recsys_batch(jax.random.fold_in(
+            jax.random.PRNGKey(args.seed + 1), step), args.batch,
+            n_dense=cfg.n_dense, n_sparse=cfg.n_sparse,
+            vocab_per_field=min(cfg.table_sizes))
+
+    return state0, step_fn, data
+
+
+def run(args) -> dict:
+    cfg = (get_smoke_config(args.arch) if args.smoke
+           else get_config(args.arch))
+    fam = family(args.arch)
+    if fam == "lm" and args.smoke:
+        cfg = dataclasses.replace(cfg, num_microbatches=1)
+    setup = dict(lm=_lm_setup, gnn=_gnn_setup, recsys=_recsys_setup)[fam]
+    state, step_fn, data = setup(cfg, args)
+
+    start = 0
+    ckpt = AsyncCheckpointer(args.ckpt_dir, keep=3) if args.ckpt_dir else None
+    if args.resume and args.ckpt_dir:
+        last = latest_step(args.ckpt_dir)
+        if last is not None:
+            state = restore(args.ckpt_dir, last, state)
+            start = last
+            print(f"[resume] restored step {last}")
+
+    monitor = StragglerMonitor(threshold=args.straggler_threshold)
+    losses = []
+    failures = 0
+    step = start
+    t_start = time.time()
+    while step < args.steps:
+        try:
+            batch = data(step)
+            monitor.start()
+            if args.fail_at_step == step and failures == 0:
+                failures += 1
+                raise InjectedFailure(f"injected node failure @ step {step}")
+            state, m = step_fn(state, batch)
+            jax.block_until_ready(m["loss"])
+            slow = monitor.stop()
+            losses.append(float(m["loss"]))
+            if args.log_every and step % args.log_every == 0:
+                print(f"step {step:5d} loss {losses[-1]:.4f}"
+                      f"{'  [STRAGGLER]' if slow else ''}")
+            step += 1
+            if ckpt and step % args.ckpt_every == 0:
+                ckpt.save(step, state)
+        except (InjectedFailure, StragglerEvicted) as e:
+            print(f"[failure] {e} — restoring from checkpoint")
+            if ckpt:
+                ckpt.wait()
+            last = latest_step(args.ckpt_dir) if args.ckpt_dir else None
+            if last is None:
+                print("[failure] no checkpoint yet; restarting from step 0")
+                step = 0
+                continue
+            state = restore(args.ckpt_dir, last, state)
+            step = last
+    if ckpt:
+        ckpt.save(step, state)
+        ckpt.wait()
+    wall = time.time() - t_start
+    return dict(losses=losses, steps=step, wall_s=wall,
+                straggler_flags=monitor.flagged, failures=failures,
+                final_loss=losses[-1] if losses else float("nan"))
+
+
+def make_args(**kw) -> argparse.Namespace:
+    """Programmatic entry (tests / examples)."""
+    defaults = dict(arch="smollm-360m", smoke=True, steps=20, batch=4,
+                    seq=64, lr=3e-4, seed=0, ckpt_dir="", ckpt_every=5,
+                    resume=False, fail_at_step=-1, straggler_threshold=10.0,
+                    compress="", hier_embed=False, log_every=0)
+    defaults.update(kw)
+    return argparse.Namespace(**defaults)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--fail-at-step", type=int, default=-1)
+    ap.add_argument("--straggler-threshold", type=float, default=10.0)
+    ap.add_argument("--compress", default="", choices=["", "int8", "topk"])
+    ap.add_argument("--hier-embed", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+    out = run(args)
+    print(f"done: {out['steps']} steps, final loss {out['final_loss']:.4f}, "
+          f"{out['wall_s']:.1f}s, stragglers={out['straggler_flags']}, "
+          f"failures={out['failures']}")
+
+
+if __name__ == "__main__":
+    main()

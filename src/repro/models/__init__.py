@@ -1,0 +1,1 @@
+"""Model zoo: transformer LMs (GQA/MLA/MoE), GNNs, DCN-v2."""

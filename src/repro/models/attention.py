@@ -1,0 +1,281 @@
+"""Attention: chunked (flash-style) softmax attention, GQA and MLA variants.
+
+Score matrices at the assigned shapes (e.g. 256 x 128heads x 4096^2) can
+never be materialized; ``chunked_attention`` scans over KV chunks carrying
+the running (max, denom, accumulator) triple — the standard online-softmax
+recurrence — so peak memory is O(S * chunk) per head and the layer remat
+policy only stores layer inputs.
+
+MLA (DeepSeek-V2) implements both the naive full path (train/prefill) and
+the *absorbed* decode path that attends in the kv_lora latent space, caching
+only (c_kv, k_rope) = kv_lora + rope_dim floats per token.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope, dense_init
+
+MASK_VALUE = -1e30
+
+
+# ----------------------------------------------------------- core softmax ---
+
+def chunked_attention(q, k, v, *, causal: bool, chunk: int = 512,
+                      q_offset=0, unroll: bool = False):
+    """Online-softmax attention with flash-style backward.
+
+    q [B, Hkv, G, Sq, Dk]; k [B, Hkv, Skv, Dk]; v [B, Hkv, Skv, Dv]
+    (G = query groups per kv head; G=1, Hkv=H recovers MHA).
+    ``q_offset`` is the absolute position of q[...,0,:] for causal masking
+    (prefill continuation / decode).
+    Returns [B, Hkv, G, Sq, Dv].
+
+    The per-chunk step is ``jax.checkpoint``-ed: backward recomputes the
+    chunk's scores/probabilities from (q, k-chunk) instead of storing them,
+    so residual memory is the O(S) carry per chunk — never the O(S^2)
+    attention matrix (the FlashAttention recipe, expressed at the XLA
+    level; the Pallas kernel realization is kernels/ territory on real
+    TPU runs).
+
+    ``unroll=True`` replaces ``lax.scan`` with a python loop — used by the
+    dry-run flop probes, because XLA cost analysis counts a scan body once
+    regardless of trip count.
+    """
+    b, hkv, g, sq, dk = q.shape
+    skv, dv = k.shape[2], v.shape[-1]
+    nchunks = skv // chunk
+    assert skv % chunk == 0, (skv, chunk)
+
+    qf = (q.astype(jnp.float32) / jnp.sqrt(dk))
+    kc = k.reshape(b, hkv, nchunks, chunk, dk)
+    vc = v.reshape(b, hkv, nchunks, chunk, dv)
+    q_pos = q_offset + jnp.arange(sq)
+
+    @jax.checkpoint
+    def step(carry, inp):
+        m, l, acc = carry
+        kb, vb, cix = inp
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kb.astype(jnp.float32))
+        if causal:
+            k_pos = cix * chunk + jnp.arange(chunk)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            s = jnp.where(mask[None, None, None], s, MASK_VALUE)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        scale = jnp.exp(m - m_new)
+        l_new = l * scale + jnp.sum(p, axis=-1)
+        acc_new = acc * scale[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, g, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, sq, dv), jnp.float32)
+    if unroll:
+        carry = (m0, l0, a0)
+        for i in range(nchunks):
+            carry, _ = step(carry, (kc[:, :, i], vc[:, :, i], i))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(
+            step, (m0, l0, a0),
+            (kc.transpose(2, 0, 1, 3, 4), vc.transpose(2, 0, 1, 3, 4),
+             jnp.arange(nchunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len):
+    """Single-token attention against a (possibly partially filled) cache.
+
+    q [B, Hkv, G, Dk]; caches [B, Hkv, S, D*]; cache_len [] or [B] — number
+    of valid cache positions (the new token attends to [0, cache_len)).
+    """
+    b, hkv, g, dk = q.shape
+    s = k_cache.shape[2]
+    qf = q.astype(jnp.float32) / jnp.sqrt(dk)
+    scores = jnp.einsum("bhgd,bhkd->bhgk", qf, k_cache.astype(jnp.float32))
+    pos = jnp.arange(s)
+    valid = pos[None, :] < jnp.broadcast_to(
+        jnp.asarray(cache_len)[..., None], (b, s)) if jnp.ndim(cache_len) \
+        else pos < cache_len
+    scores = jnp.where(valid[:, None, None, :] if jnp.ndim(cache_len)
+                       else valid[None, None, None, :], scores, MASK_VALUE)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgk,bhkd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ------------------------------------------------------------------- GQA ----
+
+def gqa_init(key, d_model: int, n_heads: int, n_kv_heads: int, d_head: int,
+             dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    return dict(
+        wq=dense_init(ks[0], d_model, n_heads * d_head, dtype),
+        wk=dense_init(ks[1], d_model, n_kv_heads * d_head, dtype),
+        wv=dense_init(ks[2], d_model, n_kv_heads * d_head, dtype),
+        wo=dense_init(ks[3], n_heads * d_head, d_model, dtype),
+    )
+
+
+def gqa_forward(p, x, *, n_heads: int, n_kv_heads: int, d_head: int,
+                rope_theta: float, positions, causal: bool = True,
+                chunk: int = 512, unroll: bool = False):
+    """x [B, S, D] -> [B, S, D]; full (training / prefill) path.
+
+    Also returns (k, v) [B, Hkv, S, Dh] for cache initialization.
+    """
+    b, s, _ = x.shape
+    g = n_heads // n_kv_heads
+    q = (x @ p["wq"]).reshape(b, s, n_kv_heads, g, d_head)
+    k = (x @ p["wk"]).reshape(b, s, n_kv_heads, d_head)
+    v = (x @ p["wv"]).reshape(b, s, n_kv_heads, d_head)
+    q = apply_rope(q.transpose(0, 2, 3, 1, 4), positions[:, None, None, :],
+                   rope_theta)                       # [B,Hkv,G,S,Dh]
+    k = apply_rope(k.transpose(0, 2, 1, 3), positions[:, None, :],
+                   rope_theta)                       # [B,Hkv,S,Dh]
+    v = v.transpose(0, 2, 1, 3)
+    out = chunked_attention(q, k, v, causal=causal, chunk=min(chunk, s),
+                            unroll=unroll)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, s, n_heads * d_head)
+    return out @ p["wo"], (k, v)
+
+
+def gqa_decode(p, x, cache, cache_len, *, n_heads: int, n_kv_heads: int,
+               d_head: int, rope_theta: float):
+    """x [B, 1, D]; cache dict(k, v) [B, Hkv, S, Dh]. Returns (out, cache)."""
+    b = x.shape[0]
+    g = n_heads // n_kv_heads
+    pos = jnp.full((b, 1), cache_len, jnp.int32)
+    q = (x @ p["wq"]).reshape(b, 1, n_kv_heads, g, d_head)
+    k = (x @ p["wk"]).reshape(b, 1, n_kv_heads, d_head)
+    v = (x @ p["wv"]).reshape(b, 1, n_kv_heads, d_head)
+    q = apply_rope(q.transpose(0, 2, 3, 1, 4), pos[:, None, None, :],
+                   rope_theta)[:, :, :, 0]                   # [B,Hkv,G,Dh]
+    k = apply_rope(k.transpose(0, 2, 1, 3), pos[:, None, :], rope_theta)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), cache_len, axis=2)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.transpose(0, 2, 1, 3).astype(cache["v"].dtype),
+        cache_len, axis=2)
+    out = decode_attention(q, k_cache, v_cache, cache_len + 1)
+    out = out.reshape(b, 1, n_heads * d_head)
+    return out @ p["wo"], dict(k=k_cache, v=v_cache)
+
+
+# ------------------------------------------------------------------- MLA ----
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    q_lora_rank: int          # 0 = no q compression
+    kv_lora_rank: int
+    qk_nope_dim: int
+    qk_rope_dim: int
+    v_head_dim: int
+    rope_theta: float = 10000.0
+
+
+def mla_init(key, cfg: MLAConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, \
+        cfg.v_head_dim
+    p = dict(
+        wkv_a=dense_init(ks[2], cfg.d_model, cfg.kv_lora_rank + dr, dtype),
+        wkv_b=dense_init(ks[3], cfg.kv_lora_rank, h * (dn + dv), dtype),
+        wo=dense_init(ks[4], h * dv, cfg.d_model, dtype),
+    )
+    if cfg.q_lora_rank:
+        p["wq_a"] = dense_init(ks[0], cfg.d_model, cfg.q_lora_rank, dtype)
+        p["wq_b"] = dense_init(ks[1], cfg.q_lora_rank, h * (dn + dr), dtype)
+    else:
+        p["wq"] = dense_init(ks[0], cfg.d_model, h * (dn + dr), dtype)
+    return p
+
+
+def _mla_q(p, x, cfg: MLAConfig):
+    b, s, _ = x.shape
+    h, dn, dr = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    q = (x @ p["wq_a"]) @ p["wq_b"] if cfg.q_lora_rank else x @ p["wq"]
+    q = q.reshape(b, s, h, dn + dr)
+    return q[..., :dn], q[..., dn:]            # nope [B,S,H,dn], rope
+
+
+def mla_forward(p, x, cfg: MLAConfig, positions, causal: bool = True,
+                chunk: int = 512, unroll: bool = False):
+    """Full path. Returns (out, (c_kv, k_rope)) for cache init."""
+    b, s, _ = x.shape
+    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, \
+        cfg.v_head_dim
+    q_nope, q_rope = _mla_q(p, x, cfg)
+    q_rope = apply_rope(q_rope.transpose(0, 2, 1, 3),
+                        positions[:, None, :], cfg.rope_theta)  # [B,H,S,dr]
+
+    ckv = x @ p["wkv_a"]                                   # [B,S,lora+dr]
+    c_kv, k_rope = ckv[..., :cfg.kv_lora_rank], ckv[..., cfg.kv_lora_rank:]
+    k_rope = apply_rope(k_rope[:, None], positions[:, None, :],
+                        cfg.rope_theta)                    # [B,1,S,dr]
+    kv = (c_kv @ p["wkv_b"]).reshape(b, s, h, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+
+    q = jnp.concatenate(
+        [q_nope.transpose(0, 2, 1, 3), q_rope], axis=-1)   # [B,H,S,dn+dr]
+    k = jnp.concatenate(
+        [k_nope.transpose(0, 2, 1, 3),
+         jnp.broadcast_to(k_rope, (b, h, s, dr))], axis=-1)
+    out = chunked_attention(q[:, :, None], k, v.transpose(0, 2, 1, 3),
+                            causal=causal, chunk=min(chunk, s),
+                            unroll=unroll)[:, :, 0]
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, h * dv)
+    return out @ p["wo"], (c_kv, k_rope[:, 0])
+
+
+def mla_decode(p, x, cache, cache_len, cfg: MLAConfig):
+    """Absorbed decode: attend in the kv_lora latent space.
+
+    cache = dict(c_kv [B, S, R], k_rope [B, S, dr]).  Per-token cache cost is
+    R + dr floats (DeepSeek-V2's 576 vs GQA's 2*Hkv*Dh) — the paper-exact
+    MLA serving advantage.
+    """
+    b = x.shape[0]
+    h, dn, dr, dv, r = (cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                        cfg.v_head_dim, cfg.kv_lora_rank)
+    pos = jnp.full((b, 1), cache_len, jnp.int32)
+    q_nope, q_rope = _mla_q(p, x, cfg)                     # [B,1,H,*]
+    q_rope = apply_rope(q_rope.transpose(0, 2, 1, 3), pos[:, None],
+                        cfg.rope_theta)[:, :, 0]           # [B,H,dr]
+
+    ckv = x @ p["wkv_a"]
+    c_new, kr_new = ckv[..., :r], ckv[..., r:]
+    kr_new = apply_rope(kr_new, pos, cfg.rope_theta)
+    c_kv = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), cache_len, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), cache_len,
+        axis=1)
+
+    wkv_b = p["wkv_b"].reshape(r, h, dn + dv)
+    w_uk, w_uv = wkv_b[..., :dn], wkv_b[..., dn:]          # [R,H,dn],[R,H,dv]
+    # absorb: q_lat[b,h,r] = q_nope[b,h,dn] . w_uk[r,h,dn]
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    scale = 1.0 / jnp.sqrt(dn + dr)
+    s = c_kv.shape[1]
+    scores = (jnp.einsum("bhr,bsr->bhs", q_lat,
+                         c_kv.astype(jnp.float32)) +
+              jnp.einsum("bhd,bsd->bhs", q_rope.astype(jnp.float32),
+                         k_rope.astype(jnp.float32))) * scale
+    valid = jnp.arange(s)[None, :] < (cache_len + 1)
+    scores = jnp.where(valid[:, None, :], scores, MASK_VALUE)
+    attn = jax.nn.softmax(scores, axis=-1)
+    ctx_lat = jnp.einsum("bhs,bsr->bhr", attn, c_kv.astype(jnp.float32))
+    ctx = jnp.einsum("bhr,rhd->bhd", ctx_lat, w_uv.astype(jnp.float32))
+    out = ctx.reshape(b, 1, h * dv).astype(x.dtype)
+    return out @ p["wo"], dict(c_kv=c_kv, k_rope=k_rope)

@@ -1,0 +1,72 @@
+"""Shared model building blocks (pure JAX, framework-free)."""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(d_in)
+    return jax.random.normal(key, (d_in, d_out), dtype) * scale
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return jax.random.normal(key, (vocab, d), dtype) * 0.02
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    """SwiGLU FFN: down( silu(x@gate) * (x@up) )."""
+    g = jax.nn.silu(x @ w_gate)
+    return (g * (x @ w_up)) @ w_down
+
+
+def rope_freqs(d_head: int, theta: float = 10000.0):
+    inv = 1.0 / (theta ** (jnp.arange(0, d_head, 2, jnp.float32) / d_head))
+    return inv  # [d_head/2]
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x [..., S, D]; positions [..., S] (broadcastable)."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)
+    ang = positions[..., None].astype(jnp.float32) * inv        # [..., S, D/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def cross_entropy(logits, labels, z_loss: float = 0.0):
+    """Stable CE over the last dim; logits may be vocab-sharded under pjit.
+
+    The gold logit is extracted with an iota-mask reduction instead of
+    ``take_along_axis``: a gather along a sharded vocab dim makes GSPMD
+    all-gather the full [B, S, V] f32 logits; the masked sum reduces
+    locally per vocab shard and all-reduces a [B, S] scalar field.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    vocab_ids = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                         logits.ndim - 1)
+    mask = vocab_ids == labels[..., None]
+    gold = jnp.sum(jnp.where(mask, logits, 0.0), axis=-1)
+    loss = lse - gold
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    return jnp.mean(loss)
+
+
+def count_params(params) -> int:
+    return sum(int(p.size) for p in jax.tree.leaves(params)
+               if hasattr(p, "size"))

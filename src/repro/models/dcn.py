@@ -1,0 +1,238 @@
+"""DCN-v2 (arXiv:2008.13535): embedding tables -> cross network -> deep MLP.
+
+Layout: the 26 per-field embedding tables are STACKED into one
+[total_rows, embed_dim] master table with static per-field offsets; the
+table is row-sharded over the entire mesh and the lookup (``jnp.take`` or
+the Pallas ``embedding_bag`` kernel) is the serving hot path.
+
+Cross layers are the DCN-v2 full-rank form  x_{l+1} = x0 ⊙ (W x_l + b) + x_l
+followed by a stacked deep MLP (1024-1024-512) and a logit head.
+
+Training paths:
+  * ``make_train_step``      — dense autodiff table grads (reference).
+  * ``make_train_step_hier`` — the PAPER'S TECHNIQUE as an optimizer
+    feature: per-step row-sparse embedding grads are block-added into a
+    hierarchical accumulator (core/vassoc.HierVec); the master table in HBM
+    is only touched when the deepest cut spills (batched scatter-apply).
+    Dense params still take AdamW.  Embedding rows follow SGD semantics
+    (DLRM-standard); ``drain_every`` forces a periodic full drain so the
+    table never lags unboundedly.
+
+Serving: ``serve_scores`` (sigmoid CTR) and ``retrieval_topk`` (one query
+against 10^6 candidate embeddings via a single GEMM + top-k, the
+retrieval_cand shape).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RecsysConfig
+from repro.core import vassoc
+from repro.distribution.sharding import constrain
+from repro.models.common import dense_init
+from repro.optim.adamw import AdamWConfig, adamw_update
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def field_offsets(cfg: RecsysConfig) -> np.ndarray:
+    """Static row offset of each field's sub-table in the stacked table."""
+    return np.concatenate([[0], np.cumsum(cfg.table_sizes)[:-1]]).astype(
+        np.int64)
+
+
+def init(key, cfg: RecsysConfig, table_scale: float = 0.01) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4 + cfg.n_cross_layers + len(cfg.mlp))
+    d0 = cfg.d_interact
+    p: Params = dict(
+        table=jax.random.normal(ks[0], (cfg.padded_rows, cfg.embed_dim),
+                                dt) * table_scale,
+        cross=[dict(w=dense_init(ks[1 + i], d0, d0, dt),
+                    b=jnp.zeros((d0,), dt))
+               for i in range(cfg.n_cross_layers)],
+    )
+    dims = (d0,) + cfg.mlp
+    p["mlp"] = [dict(w=dense_init(ks[1 + cfg.n_cross_layers + i],
+                                  dims[i], dims[i + 1], dt),
+                     b=jnp.zeros((dims[i + 1],), dt))
+                for i in range(len(cfg.mlp))]
+    p["logit_w"] = dense_init(ks[-1], cfg.mlp[-1], 1, dt)
+    p["logit_b"] = jnp.zeros((), dt)
+    return p
+
+
+def global_ids(sparse: Array, cfg: RecsysConfig) -> Array:
+    """[B, F] or [B, F, H] per-field ids -> stacked-table row ids."""
+    if sparse.ndim == 2:
+        sparse = sparse[..., None]
+    sizes = jnp.asarray(cfg.table_sizes, jnp.int32)
+    offs = jnp.asarray(field_offsets(cfg), jnp.int32)
+    return (sparse % sizes[None, :, None]) + offs[None, :, None]
+
+
+def embed_lookup(table: Array, sparse: Array, cfg: RecsysConfig) -> Array:
+    """-> [B, n_sparse * embed_dim] (multi-hot bags sum-combined)."""
+    gids = global_ids(sparse, cfg)                       # [B, F, H]
+    b, f, hh = gids.shape
+    if cfg.use_kernel:
+        from repro.kernels.embedding_bag import ops as eb_ops
+        out = eb_ops.embedding_bag(table, gids.reshape(b * f, hh))
+        out = out.reshape(b, f, cfg.embed_dim).astype(table.dtype)
+    else:
+        vecs = jnp.take(table, gids, axis=0)             # [B, F, H, D]
+        out = jnp.sum(vecs, axis=2)
+    return constrain(out.reshape(b, f * cfg.embed_dim), "batch", None)
+
+
+def interact(params: Params, dense: Array, embeds: Array,
+             cfg: RecsysConfig) -> Array:
+    """Cross network + deep MLP -> final hidden [B, mlp[-1]]."""
+    x0 = jnp.concatenate([dense.astype(embeds.dtype), embeds], axis=-1)
+    x0 = constrain(x0, "batch", None)
+    x = x0
+    for lp in params["cross"]:
+        x = x0 * (x @ lp["w"] + lp["b"]) + x              # DCN-v2 cross
+    for lp in params["mlp"]:
+        x = jax.nn.relu(x @ lp["w"] + lp["b"])
+    return constrain(x, "batch", None)
+
+
+def forward(params: Params, batch: Dict[str, Array], cfg: RecsysConfig
+            ) -> Array:
+    embeds = embed_lookup(params["table"], batch["sparse"], cfg)
+    h = interact(params, batch["dense"], embeds, cfg)
+    return (h @ params["logit_w"])[:, 0] + params["logit_b"]
+
+
+def bce(logits: Array, labels: Array) -> Array:
+    x, y = logits.astype(jnp.float32), labels.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(x, 0) - x * y + jnp.log1p(jnp.exp(-jnp.abs(x))))
+
+
+# ---------------------------------------------------------------- training --
+
+def make_train_step(cfg: RecsysConfig, opt_cfg: AdamWConfig):
+    """Reference path: dense autodiff grads for everything (incl. table)."""
+
+    def loss_fn(params, batch):
+        logits = forward(params, batch, cfg)
+        loss = bce(logits, batch["labels"])
+        return loss, dict(loss=loss)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step(params, opt_state, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        params, opt_state, gnorm = adamw_update(grads, opt_state, params,
+                                                opt_cfg)
+        return params, opt_state, dict(metrics, gnorm=gnorm)
+
+    return step
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class HierEmbedState:
+    """Pending sparse embedding-gradient mass (the paper's hierarchy)."""
+    hier: vassoc.HierVec
+    steps: Array                     # int32, for the periodic drain
+
+
+def hier_embed_init(cfg: RecsysConfig, batch: int,
+                    cuts: Tuple[int, ...] = (8192, 65536, 524288)
+                    ) -> HierEmbedState:
+    block = batch * cfg.n_sparse * cfg.multi_hot
+    return HierEmbedState(
+        hier=vassoc.create(cuts, block, cfg.embed_dim),
+        steps=jnp.zeros((), jnp.int32))
+
+
+def make_train_step_hier(cfg: RecsysConfig, opt_cfg: AdamWConfig,
+                         embed_lr: float = 0.05, drain_every: int = 64):
+    """Paper-technique path: hierarchical sparse embedding-grad accumulation.
+
+    The embedding activation e [B, F, D] is treated as a leaf: autodiff
+    yields (dense-param grads, grad_e); grad_e rows are block-added into the
+    HierVec keyed by stacked-table row id.  The HBM master table is touched
+    only on drain (deepest-cut pressure or every ``drain_every`` steps).
+    """
+
+    def loss_from_embeds(rest, embeds_flat, batch):
+        h = interact(rest, batch["dense"],
+                     constrain(embeds_flat, "batch", None), cfg)
+        logits = (h @ rest["logit_w"])[:, 0] + rest["logit_b"]
+        loss = bce(logits, batch["labels"])
+        return loss, dict(loss=loss)
+
+    grad_fn = jax.value_and_grad(loss_from_embeds, argnums=(0, 1),
+                                 has_aux=True)
+
+    def step(params, opt_state, hstate: HierEmbedState, batch):
+        table = params["table"]
+        rest = {k: v for k, v in params.items() if k != "table"}
+        gids = global_ids(batch["sparse"], cfg)          # [B, F, H]
+        b, f, hh = gids.shape
+        vecs = jnp.take(table, gids, axis=0)             # [B, F, H, D]
+        embeds_flat = jnp.sum(vecs, axis=2).reshape(b, f * cfg.embed_dim)
+
+        (loss, metrics), (g_rest, g_embeds) = grad_fn(rest, embeds_flat,
+                                                      batch)
+        rest, opt_state, gnorm = adamw_update(g_rest, opt_state, rest,
+                                              opt_cfg)
+
+        # row-sparse table grads: every (b, f, h) occurrence carries the
+        # field's grad slice (sum-combine duplicates inside the hierarchy)
+        g_e = g_embeds.reshape(b, f, 1, cfg.embed_dim)
+        g_rows = jnp.broadcast_to(g_e, (b, f, hh, cfg.embed_dim))
+        hier = vassoc.update(hstate.hier,
+                             gids.reshape(-1), g_rows.reshape(-1,
+                                                              cfg.embed_dim))
+        steps = hstate.steps + 1
+
+        last = hier.layers[-1]
+        pressure = (last.nnz > hier.cuts[-1]) | (steps % drain_every == 0)
+
+        def drain(args):
+            hier, table = args
+            return vassoc.drain_to_table(hier, table, -embed_lr)
+
+        hier, table = jax.lax.cond(
+            pressure, drain, lambda a: a, (hier, table))
+
+        params = dict(rest, table=table)
+        telemetry = dict(metrics, gnorm=gnorm,
+                         pending_nnz=jnp.sum(hier.nnz_per_layer()),
+                         spills=hier.spills, drained=pressure)
+        return params, opt_state, HierEmbedState(hier, steps), telemetry
+
+    return step
+
+
+# ----------------------------------------------------------------- serving --
+
+def serve_scores(params: Params, batch: Dict[str, Array],
+                 cfg: RecsysConfig) -> Array:
+    return jax.nn.sigmoid(forward(params, batch, cfg))
+
+
+def query_embedding(params: Params, batch: Dict[str, Array],
+                    cfg: RecsysConfig) -> Array:
+    embeds = embed_lookup(params["table"], batch["sparse"], cfg)
+    return interact(params, batch["dense"], embeds, cfg)   # [B, mlp[-1]]
+
+
+def retrieval_topk(params: Params, batch: Dict[str, Array],
+                   candidates: Array, cfg: RecsysConfig, k: int = 100
+                   ) -> Tuple[Array, Array]:
+    """Score query batch against [N, mlp[-1]] candidates; top-k per query."""
+    q = query_embedding(params, batch, cfg)               # [B, D]
+    scores = constrain(q @ candidates.T, "batch", "tp")   # [B, N]
+    return jax.lax.top_k(scores, k)

@@ -1,0 +1,302 @@
+"""GNN zoo: GAT, GIN, GatedGCN, GraphCast-style encoder-processor-decoder.
+
+All message passing is edge-list based: gather source-node features per
+edge, transform, then ``segment_sum``/``segment_max`` into destination nodes
+(JAX has no CSR — the edge-index -> scatter representation IS the system).
+``cfg.use_kernel`` routes the destination reduction through the Pallas
+``segment_agg`` kernel (sorted-edge tiled segment sum, VMEM-resident
+accumulators) instead of ``jax.ops.segment_sum``.
+
+Graph dict convention (data/graphs.py builders):
+    node_feat [N, F]  edge_src [E]  edge_dst [E]
+    (+ graph_ids [N] for batched small graphs, targets [N, V] for regression)
+
+Tasks: "node" (per-node classification), "graph" (readout classification),
+"regress" (per-node regression, GraphCast's weather-state prediction).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig
+from repro.distribution.sharding import constrain
+from repro.models.common import dense_init
+from repro.optim.adamw import AdamWConfig, adamw_update
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+# ------------------------------------------------------------- primitives ---
+
+def _segment_sum(cfg: GNNConfig, messages: Array, seg_ids: Array,
+                 num_segments: int) -> Array:
+    """Destination-node reduction; kernel path or jnp reference path."""
+    if cfg.use_kernel and messages.ndim == 2:
+        from repro.kernels.segment_agg import ops as seg_ops
+        return seg_ops.segment_sum(
+            messages, seg_ids, num_segments=num_segments).astype(
+                messages.dtype)
+    return jax.ops.segment_sum(messages, seg_ids, num_segments=num_segments)
+
+
+def segment_softmax(scores: Array, dst: Array, n_nodes: int) -> Array:
+    """Edge softmax: normalize scores [E, ...] over edges sharing a dst."""
+    smax = jax.ops.segment_max(scores, dst, num_segments=n_nodes)
+    ex = jnp.exp(scores - smax[dst])
+    denom = jax.ops.segment_sum(ex, dst, num_segments=n_nodes)
+    return ex / jnp.maximum(denom[dst], 1e-16)
+
+
+def _mlp_init(key, dims, dtype):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [dict(w=dense_init(k, i, o, dtype), b=jnp.zeros((o,), dtype))
+            for k, i, o in zip(ks, dims[:-1], dims[1:])]
+
+
+def _mlp(layers, x, act=jax.nn.relu):
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if i < len(layers) - 1:
+            x = act(x)
+    return x
+
+
+def _layer_norm(x, eps=1e-5):
+    m = jnp.mean(x, axis=-1, keepdims=True)
+    v = jnp.var(x, axis=-1, keepdims=True)
+    return (x - m) * jax.lax.rsqrt(v + eps)
+
+
+# -------------------------------------------------------------------- GAT ---
+
+def _gat_layer_init(key, d_in, d_head, n_heads, dtype):
+    kw, ks, kd = jax.random.split(key, 3)
+    return dict(w=dense_init(kw, d_in, n_heads * d_head, dtype),
+                a_src=jax.random.normal(ks, (n_heads, d_head), dtype) * 0.1,
+                a_dst=jax.random.normal(kd, (n_heads, d_head), dtype) * 0.1)
+
+
+def _gat_layer(p, h, src, dst, n_nodes, n_heads, cfg, concat=True):
+    e = src.shape[0]
+    hw = (h @ p["w"]).reshape(n_nodes, n_heads, -1)      # [N, H, D]
+    s_src = jnp.einsum("nhd,hd->nh", hw, p["a_src"])     # [N, H]
+    s_dst = jnp.einsum("nhd,hd->nh", hw, p["a_dst"])
+    scores = jax.nn.leaky_relu(s_src[src] + s_dst[dst], 0.2)   # [E, H]
+    alpha = segment_softmax(scores, dst, n_nodes)
+    msg = hw[src] * alpha[..., None]                     # [E, H, D]
+    msg = constrain(msg, "batch", None, None)
+    d_head = hw.shape[-1]
+    out = _segment_sum(cfg, msg.reshape(e, n_heads * d_head), dst, n_nodes)
+    out = out.reshape(n_nodes, n_heads, d_head)
+    return out.reshape(n_nodes, -1) if concat else jnp.mean(out, axis=1)
+
+
+# -------------------------------------------------------------------- GIN ---
+
+def _gin_layer_init(key, d_in, d_hidden, dtype):
+    return dict(mlp=_mlp_init(key, (d_in, d_hidden, d_hidden), dtype),
+                eps=jnp.zeros((), dtype))
+
+
+def _gin_layer(p, h, src, dst, n_nodes, cfg, learnable_eps=True):
+    msg = constrain(h[src], "batch", None)
+    agg = _segment_sum(cfg, msg, dst, n_nodes)
+    eps = p["eps"] if learnable_eps else 0.0
+    out = _mlp(p["mlp"], (1.0 + eps) * h + agg)
+    return _layer_norm(out)          # stands in for the reference BatchNorm
+
+
+# --------------------------------------------------------------- GatedGCN ---
+
+def _gatedgcn_layer_init(key, d, dtype):
+    ks = jax.random.split(key, 5)
+    return {n: dense_init(k, d, d, dtype)
+            for n, k in zip(("A", "B", "C", "U", "V"), ks)}
+
+
+def _gatedgcn_layer(p, h, e, src, dst, n_nodes, cfg):
+    """Bresson & Laurent gated graph conv with edge-feature recurrence."""
+    e_new = h[src] @ p["A"] + h[dst] @ p["B"] + e @ p["C"]     # [E, D]
+    gate = jax.nn.sigmoid(e_new)
+    msg = constrain(gate * (h[src] @ p["V"]), "batch", None)
+    num = _segment_sum(cfg, msg, dst, n_nodes)
+    den = _segment_sum(cfg, gate, dst, n_nodes)
+    h_new = h @ p["U"] + num / (den + 1e-6)
+    h_new = h + jax.nn.relu(_layer_norm(h_new))                # residual
+    e_new = e + jax.nn.relu(_layer_norm(e_new))
+    return h_new, e_new
+
+
+# -------------------------------------------- GraphCast interaction block ---
+
+def _interaction_init(key, d, dtype):
+    ke, kn = jax.random.split(key)
+    return dict(edge_mlp=_mlp_init(ke, (3 * d, d, d), dtype),
+                node_mlp=_mlp_init(kn, (2 * d, d, d), dtype))
+
+
+def _interaction_layer(p, h, e, src, dst, n_nodes, cfg):
+    """GraphCast/MeshGraphNet InteractionNetwork with residuals."""
+    e_new = _mlp(p["edge_mlp"], jnp.concatenate([e, h[src], h[dst]], -1))
+    e = e + e_new
+    agg = _segment_sum(cfg, constrain(e, "batch", None), dst, n_nodes)
+    h_new = _mlp(p["node_mlp"], jnp.concatenate([h, agg], -1))
+    return h + h_new, e
+
+
+# ------------------------------------------------------------- full model ---
+
+def init(key, cfg: GNNConfig, d_feat: int, n_out: int) -> Params:
+    """Build params for ``cfg.kind`` with input dim d_feat, output n_out."""
+    dt = jnp.dtype(cfg.dtype)
+    d = cfg.d_hidden
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    k_in, k_ein, k_out, *kl = keys
+    p: Params = {}
+
+    if cfg.kind == "gat":
+        dims = [d_feat] + [d * cfg.n_heads] * (cfg.n_layers - 1)
+        p["layers"] = [
+            _gat_layer_init(kl[i], dims[i], d, cfg.n_heads, dt)
+            for i in range(cfg.n_layers)]
+        p["head"] = dense_init(k_out, d, n_out, dt)   # final layer averaged
+    elif cfg.kind == "gin":
+        dims = [d_feat] + [d] * (cfg.n_layers - 1)
+        p["layers"] = [_gin_layer_init(kl[i], dims[i], d, dt)
+                       for i in range(cfg.n_layers)]
+        p["head"] = dense_init(k_out, d, n_out, dt)
+    elif cfg.kind == "gatedgcn":
+        p["w_in"] = dense_init(k_in, d_feat, d, dt)
+        p["layers"] = [_gatedgcn_layer_init(kl[i], d, dt)
+                       for i in range(cfg.n_layers)]
+        p["head"] = dense_init(k_out, d, n_out, dt)
+    elif cfg.kind == "graphcast":
+        # encoder (node + edge embed) -> processor x L -> decoder
+        p["w_in"] = _mlp_init(k_in, (d_feat, d, d), dt)
+        p["w_edge_in"] = _mlp_init(k_ein, (1, d, d), dt)
+        p["layers"] = [_interaction_init(kl[i], d, dt)
+                       for i in range(cfg.n_layers)]
+        p["head"] = _mlp_init(k_out, (d, d, n_out), dt)
+    else:
+        raise ValueError(f"unknown GNN kind {cfg.kind!r}")
+    return p
+
+
+def forward(params: Params, cfg: GNNConfig, graph: Dict[str, Array]) -> Array:
+    """Returns per-node outputs [N, n_out] (callers readout for graph tasks)."""
+    h = graph["node_feat"]
+    src, dst = graph["edge_src"], graph["edge_dst"]
+    n = h.shape[0]
+
+    # per-layer remat: at ogb_products scale (62M edges) storing every
+    # layer's edge activations for backward is hundreds of GiB; checkpoint
+    # keeps only layer inputs and recomputes inside backward.
+    def ckpt(fn):
+        return jax.checkpoint(fn) if cfg.remat else fn
+
+    if cfg.kind == "gat":
+        for i, lp in enumerate(params["layers"]):
+            last = i == len(params["layers"]) - 1
+
+            def blk(h, lp=lp, last=last):
+                out = _gat_layer(lp, h, src, dst, n, cfg.n_heads, cfg,
+                                 concat=not last)
+                return out if last else jax.nn.elu(out)
+
+            h = constrain(ckpt(blk)(h), "batch", None)
+        return h @ params["head"]
+    if cfg.kind == "gin":
+        for lp in params["layers"]:
+            def blk(h, lp=lp):
+                return _gin_layer(lp, h, src, dst, n, cfg,
+                                  cfg.learnable_eps)
+
+            h = constrain(ckpt(blk)(h), "batch", None)
+        return h @ params["head"]
+    if cfg.kind == "gatedgcn":
+        h = h @ params["w_in"]
+        e = jnp.zeros((src.shape[0], cfg.d_hidden), h.dtype)
+        for lp in params["layers"]:
+            def blk(he, lp=lp):
+                return _gatedgcn_layer(lp, he[0], he[1], src, dst, n, cfg)
+
+            h, e = ckpt(blk)((h, e))
+            h = constrain(h, "batch", None)
+            e = constrain(e, "batch", None)
+        return h @ params["head"]
+    if cfg.kind == "graphcast":
+        h = _mlp(params["w_in"], h)
+        e = _mlp(params["w_edge_in"],
+                 jnp.ones((src.shape[0], 1), h.dtype))
+        for lp in params["layers"]:
+            def blk(he, lp=lp):
+                return _interaction_layer(lp, he[0], he[1], src, dst, n,
+                                          cfg)
+
+            h, e = ckpt(blk)((h, e))
+            h = constrain(h, "batch", None)
+            e = constrain(e, "batch", None)
+        return _mlp(params["head"], h)
+    raise ValueError(cfg.kind)
+
+
+def graph_readout(node_out: Array, graph_ids: Array, n_graphs: int) -> Array:
+    return jax.ops.segment_sum(node_out, graph_ids, num_segments=n_graphs)
+
+
+# ---------------------------------------------------------------- training --
+
+def make_loss_fn(cfg: GNNConfig, task: str, seed_count: int = 0):
+    """``seed_count`` > 0 (static) restricts node-task loss to the first
+    ``seed_count`` positions — the seeds of a sampled node flow."""
+    def loss_fn(params, batch):
+        out = forward(params, cfg, batch)
+        if task == "node":
+            logits = out
+            labels = batch["labels"]
+            if seed_count:                      # sampled: loss on seeds only
+                logits, labels = logits[:seed_count], labels[:seed_count]
+            ls = jax.nn.log_softmax(logits.astype(jnp.float32))
+            loss = -jnp.mean(jnp.take_along_axis(
+                ls, labels[:, None], axis=-1))
+            acc = jnp.mean(jnp.argmax(logits, -1) == labels)
+            return loss, dict(loss=loss, acc=acc)
+        if task == "graph":
+            n_graphs = batch["labels"].shape[0]
+            logits = graph_readout(out, batch["graph_ids"], n_graphs)
+            ls = jax.nn.log_softmax(logits.astype(jnp.float32))
+            loss = -jnp.mean(jnp.take_along_axis(
+                ls, batch["labels"][:, None], axis=-1))
+            acc = jnp.mean(jnp.argmax(logits, -1) == batch["labels"])
+            return loss, dict(loss=loss, acc=acc)
+        if task == "regress":
+            err = (out - batch["targets"]).astype(jnp.float32)
+            loss = jnp.mean(jnp.square(err))
+            return loss, dict(loss=loss, acc=jnp.zeros(()))
+        raise ValueError(task)
+    return loss_fn
+
+
+def make_train_step(cfg: GNNConfig, opt_cfg: AdamWConfig, task: str,
+                    seed_count: int = 0):
+    loss_fn = make_loss_fn(cfg, task, seed_count)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step(params, opt_state, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        params, opt_state, gnorm = adamw_update(grads, opt_state, params,
+                                                opt_cfg)
+        return params, opt_state, dict(metrics, gnorm=gnorm)
+
+    return step
+
+
+def task_for_shape(shape_kind: str, arch_kind: str) -> str:
+    if arch_kind == "graphcast":
+        return "regress"
+    return "graph" if shape_kind == "batched" else "node"

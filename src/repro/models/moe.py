@@ -1,0 +1,134 @@
+"""Mixture-of-Experts FFN: shared + routed experts, top-k, capacity dispatch.
+
+Dispatch is the sort-free capacity-slot scheme: each (token, choice) pair
+claims a slot in its expert's capacity buffer via a cumulative-count over the
+one-hot routing matrix; expert FFNs then run as one batched GEMM over
+[E, C, D] (MXU-friendly, FLOPs = tokens * k, not tokens * E), and results
+scatter-add back with combine weights.  Dropped tokens (capacity overflow)
+fall through the residual, GShard-style.  Expert dim shards over the mesh's
+"model" axis (EP) when divisible; the [E, C, D] dispatch/return movement is
+what XLA turns into all-to-alls across EP shards.
+
+Aux losses: load-balance (Switch) + router z-loss.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distribution.sharding import constrain
+from repro.models.common import dense_init, swiglu
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff_expert: int
+    n_experts: int
+    top_k: int
+    n_shared: int = 0
+    capacity_factor: float = 1.25
+    balance_coef: float = 0.01
+    z_coef: float = 1e-3
+
+
+def moe_init(key, cfg: MoEConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 7)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff_expert
+    p = dict(
+        router=dense_init(ks[0], d, e, dtype),
+        w_gate=jax.random.normal(ks[1], (e, d, f), dtype) / jnp.sqrt(d),
+        w_up=jax.random.normal(ks[2], (e, d, f), dtype) / jnp.sqrt(d),
+        w_down=jax.random.normal(ks[3], (e, f, d), dtype) / jnp.sqrt(f),
+    )
+    if cfg.n_shared:
+        fs = f * cfg.n_shared
+        p["shared_gate"] = dense_init(ks[4], d, fs, dtype)
+        p["shared_up"] = dense_init(ks[5], d, fs, dtype)
+        p["shared_down"] = dense_init(ks[6], fs, d, dtype)
+    return p
+
+
+def _capacity(tokens: int, cfg: MoEConfig) -> int:
+    c = int(tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)   # round up to 8
+
+
+def moe_forward(p, x, cfg: MoEConfig, shard: str = "ep"
+                ) -> Tuple[jax.Array, jax.Array]:
+    """x [B, S, D] -> (out [B, S, D], aux_loss []).
+
+    ``shard``: "ep" shards the [E, C, D] dispatch buffers on the expert dim
+    over the mesh's model axis (classic EP; XLA inserts the all-to-alls);
+    "tp" keeps experts replicated and shards the FFN inner dim instead (used
+    when n_experts doesn't divide the model axis).
+    """
+    b, s, d = x.shape
+    t = b * s
+    xt = constrain(x.reshape(t, d), "batch", None)
+    cap = _capacity(t, cfg)
+    ep = "ep" if shard == "ep" else None
+    tp = "tp" if shard == "tp" else None
+
+    logits = (xt @ p["router"]).astype(jnp.float32)          # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, cfg.top_k)    # [T, K]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # --- capacity-slot assignment (sort-free, deterministic) ---------------
+    # onehot[t, k, e]; slot = #prior (token,k) pairs routed to e
+    onehot = jax.nn.one_hot(gate_idx, cfg.n_experts, dtype=jnp.int32)
+    flat_oh = onehot.reshape(t * cfg.top_k, cfg.n_experts)
+    slots = jnp.cumsum(flat_oh, axis=0) - flat_oh            # [T*K, E]
+    slot_of = jnp.sum(slots * flat_oh, axis=-1)              # [T*K]
+    expert_of = gate_idx.reshape(t * cfg.top_k)
+    keep = slot_of < cap
+    w_of = gate_vals.reshape(t * cfg.top_k) * keep
+
+    # --- dispatch: scatter token IDS, gather token ROWS ----------------------
+    # Scattering feature rows into [E, C, D] makes GSPMD materialize
+    # u32 index maps of the whole buffer (9+ GiB/device at 65k tokens,
+    # measured — EXPERIMENTS.md §Perf hillclimb 1).  Instead scatter only
+    # the int32 token id into the tiny [E, C+1] slot table, then GATHER
+    # rows from the (batch-sharded) token matrix; gathers shard cleanly.
+    src_tok = jnp.repeat(jnp.arange(t), cfg.top_k)
+    slot_clip = jnp.where(keep, slot_of, cap)      # overflow -> dump slot
+    slot_token = jnp.full((cfg.n_experts, cap + 1), t, jnp.int32)
+    slot_token = slot_token.at[expert_of, slot_clip].set(
+        src_tok.astype(jnp.int32))
+    slot_token = constrain(slot_token[:, :cap], ep, None,
+                           divisible_dims=False)
+    xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)])  # dump row
+    xe = constrain(xt_pad[slot_token], ep, None, None,           # [E, C, D]
+                   divisible_dims=False)
+
+    # --- expert FFN: batched GEMMs over the expert dim ----------------------
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"]))
+    u = jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+    g = constrain(g, ep, None, tp, divisible_dims=False)
+    ye = jnp.einsum("ecf,efd->ecd", g * u, p["w_down"])      # [E, C, D]
+    ye = constrain(ye, ep, None, None, divisible_dims=False)
+
+    # --- combine: weighted gather back to tokens -----------------------------
+    contrib = ye[expert_of, jnp.minimum(slot_of, cap - 1)]   # [T*K, D]
+    contrib = constrain(contrib, "batch", None)
+    contrib = contrib * w_of[:, None].astype(contrib.dtype)
+    out = jax.ops.segment_sum(contrib, src_tok, num_segments=t,
+                              indices_are_sorted=True)
+
+    if cfg.n_shared:
+        out = out + swiglu(xt, p["shared_gate"], p["shared_up"],
+                           p["shared_down"])
+
+    # --- aux losses ----------------------------------------------------------
+    me = jnp.mean(probs, axis=0)                             # mean router prob
+    ce = jnp.mean(
+        jnp.sum(onehot, axis=1).astype(jnp.float32), axis=0)  # frac routed
+    balance = cfg.n_experts * jnp.sum(me * ce) * cfg.balance_coef
+    z = jnp.mean(jnp.square(jax.scipy.special.logsumexp(logits, axis=-1))) \
+        * cfg.z_coef
+    return out.reshape(b, s, d).astype(x.dtype), balance + z

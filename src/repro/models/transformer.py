@@ -1,0 +1,347 @@
+"""Decoder-only transformer LM: GQA/MLA attention, dense/MoE FFN.
+
+One code path covers all five assigned LM architectures; the config selects
+the attention flavor (GQA incl. MHA, or DeepSeek-V2 MLA) and the FFN flavor
+(SwiGLU dense, or shared+routed top-k MoE).
+
+Scale discipline:
+  * layers run under ``lax.scan`` over stacked params — HLO size and compile
+    time are O(1) in depth (mandatory at 60 layers x 512 devices);
+  * each layer body is ``jax.checkpoint``-ed (full remat: activations are
+    recomputed in backward, only layer inputs are stored);
+  * ``num_microbatches`` > 1 turns train_step into an in-step gradient
+    accumulation scan (f32 accumulators) for the 1M-token global batches;
+  * activations carry logical sharding constraints ("batch", "tp") resolved
+    by the active ShardingPolicy; with no policy they are no-ops.
+
+Entry points: init, forward, loss_fn, make_train_step, init_cache, prefill,
+decode_step — launch/dryrun.py lowers make_train_step / decode_step / prefill
+per assigned (arch x shape) cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.distribution.sharding import constrain
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models.attention import MLAConfig
+from repro.models.common import (cross_entropy, dense_init, embed_init,
+                                 rms_norm, swiglu)
+from repro.models.moe import MoEConfig
+from repro.optim.adamw import AdamWConfig, adamw_update
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def _dtype(cfg: LMConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def mla_config(cfg: LMConfig) -> MLAConfig:
+    return MLAConfig(
+        d_model=cfg.d_model, n_heads=cfg.n_heads,
+        q_lora_rank=cfg.q_lora_rank, kv_lora_rank=cfg.kv_lora_rank,
+        qk_nope_dim=cfg.qk_nope_dim, qk_rope_dim=cfg.qk_rope_dim,
+        v_head_dim=cfg.v_head_dim, rope_theta=cfg.rope_theta)
+
+
+def moe_config(cfg: LMConfig) -> MoEConfig:
+    return MoEConfig(
+        d_model=cfg.d_model, d_ff_expert=cfg.d_ff_expert,
+        n_experts=cfg.n_experts, top_k=cfg.top_k, n_shared=cfg.n_shared,
+        capacity_factor=cfg.capacity_factor)
+
+
+# ------------------------------------------------------------------- init ---
+
+def _init_layer(key, cfg: LMConfig) -> Params:
+    dt = _dtype(cfg)
+    k_attn, k_ffn = jax.random.split(key)
+    if cfg.attn == "mla":
+        attn = attn_mod.mla_init(k_attn, mla_config(cfg), dt)
+    else:
+        attn = attn_mod.gqa_init(k_attn, cfg.d_model, cfg.n_heads,
+                                 cfg.n_kv_heads, cfg.d_head, dt)
+    if cfg.moe:
+        ffn = moe_mod.moe_init(k_ffn, moe_config(cfg), dt)
+    else:
+        ks = jax.random.split(k_ffn, 3)
+        ffn = dict(w_gate=dense_init(ks[0], cfg.d_model, cfg.d_ff, dt),
+                   w_up=dense_init(ks[1], cfg.d_model, cfg.d_ff, dt),
+                   w_down=dense_init(ks[2], cfg.d_ff, cfg.d_model, dt))
+    return dict(ln1=jnp.ones((cfg.d_model,), dt),
+                ln2=jnp.ones((cfg.d_model,), dt),
+                attn=attn, ffn=ffn)
+
+
+def init(key, cfg: LMConfig) -> Params:
+    dt = _dtype(cfg)
+    k_embed, k_head, k_layers = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: _init_layer(k, cfg))(layer_keys)
+    p = dict(embed=embed_init(k_embed, cfg.vocab, cfg.d_model, dt),
+             final_norm=jnp.ones((cfg.d_model,), dt),
+             layers=layers)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = embed_init(k_head, cfg.vocab, cfg.d_model, dt)
+    return p
+
+
+# ---------------------------------------------------------------- forward ---
+
+def _layer_forward(lp: Params, x: Array, cfg: LMConfig, positions: Array,
+                   collect_cache: bool):
+    unroll = not cfg.scan_layers       # probes: unroll attn chunks too
+    h = rms_norm(x, lp["ln1"])
+    if cfg.attn == "mla":
+        attn_out, cache = attn_mod.mla_forward(
+            lp["attn"], h, mla_config(cfg), positions,
+            chunk=cfg.attn_chunk, unroll=unroll)
+        cache = dict(c_kv=cache[0], k_rope=cache[1])
+    else:
+        attn_out, (k, v) = attn_mod.gqa_forward(
+            lp["attn"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            d_head=cfg.d_head, rope_theta=cfg.rope_theta,
+            positions=positions, chunk=cfg.attn_chunk, unroll=unroll)
+        cache = dict(k=k, v=v)
+    x = constrain(x + attn_out, "batch", None, None)
+    h = rms_norm(x, lp["ln2"])
+    if cfg.moe:
+        f, aux = moe_mod.moe_forward(lp["ffn"], h, moe_config(cfg),
+                                     shard=cfg.moe_shard)
+    else:
+        f = swiglu(h, lp["ffn"]["w_gate"], lp["ffn"]["w_up"],
+                   lp["ffn"]["w_down"])
+        aux = jnp.zeros((), jnp.float32)
+    x = constrain(x + f, "batch", None, None)
+    return x, aux, (cache if collect_cache else None)
+
+
+def _embed(params: Params, tokens: Array, cfg: LMConfig) -> Array:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    return constrain(x, "batch", None, None)
+
+
+def _logits(params: Params, x: Array, cfg: LMConfig) -> Array:
+    x = rms_norm(x, params["final_norm"])
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("...d,vd->...v", x, head)
+    spec = ("batch", None, "tp") if logits.ndim == 3 else ("batch", "tp")
+    return constrain(logits, *spec)
+
+
+def forward(params: Params, tokens: Array, cfg: LMConfig
+            ) -> Tuple[Array, Array]:
+    """tokens [B, S] -> (logits [B, S, V], aux_loss [])."""
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = _embed(params, tokens, cfg)
+
+    def body(x, lp):
+        x, aux, _ = _layer_forward(lp, x, cfg, positions, False)
+        return x, aux
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if cfg.scan_layers:
+        x, auxs = jax.lax.scan(body, x, params["layers"])
+        aux = jnp.sum(auxs)
+    else:                               # unrolled (dry-run flop probes)
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda t: t[i], params["layers"])
+            x, a = body(x, lp)
+            aux = aux + a
+    return _logits(params, x, cfg), aux
+
+
+def loss_fn(params: Params, batch: Dict[str, Array], cfg: LMConfig
+            ) -> Tuple[Array, Dict[str, Array]]:
+    logits, aux = forward(params, batch["tokens"], cfg)
+    ce = cross_entropy(logits, batch["labels"])
+    return ce + aux, dict(loss=ce, aux=aux)
+
+
+# --------------------------------------------------------------- training ---
+
+def make_train_step(cfg: LMConfig, opt_cfg: AdamWConfig,
+                    lr_schedule=None):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``cfg.num_microbatches`` > 1 runs in-step gradient accumulation: the
+    global batch is split on dim 0 and scanned, grads accumulate in f32.
+    """
+    nm = cfg.num_microbatches
+    grad_fn = jax.value_and_grad(partial(loss_fn, cfg=cfg), has_aux=True)
+
+    def step(params, opt_state, batch):
+        if nm == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape(nm, x.shape[0] // nm, *x.shape[1:]),
+                batch)
+
+            acc_dt = jnp.dtype(cfg.grad_accum_dtype)
+
+            def mb_body(acc, mbatch):
+                (l, m), g = grad_fn(params, mbatch)
+                g_acc = jax.tree.map(
+                    lambda a, x: a + x.astype(acc_dt), acc[0], g)
+                return (g_acc, acc[1] + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt),
+                              params)
+            (g_sum, l_sum), _ = jax.lax.scan(
+                mb_body, (g0, jnp.zeros((), jnp.float32)), mb)
+            grads = jax.tree.map(lambda g: g / nm, g_sum)
+            loss = l_sum / nm
+            metrics = dict(loss=loss, aux=jnp.zeros((), jnp.float32))
+        lr = lr_schedule(opt_state["count"]) if lr_schedule else None
+        params, opt_state, gnorm = adamw_update(
+            grads, opt_state, params, opt_cfg, lr)
+        metrics = dict(metrics, total=loss, gnorm=gnorm)
+        return params, opt_state, metrics
+
+    return step
+
+
+# ---------------------------------------------------------------- serving ---
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int) -> Params:
+    """Zeroed stacked KV cache [L, ...] (decode_step input layout)."""
+    dt = _dtype(cfg)
+    L = cfg.n_layers
+    if cfg.attn == "mla":
+        return dict(
+            c_kv=jnp.zeros((L, batch, max_len, cfg.kv_lora_rank), dt),
+            k_rope=jnp.zeros((L, batch, max_len, cfg.qk_rope_dim), dt))
+    return dict(
+        k=jnp.zeros((L, batch, cfg.n_kv_heads, max_len, cfg.d_head), dt),
+        v=jnp.zeros((L, batch, cfg.n_kv_heads, max_len, cfg.d_head), dt))
+
+
+def decode_step(params: Params, token: Array, cache: Params,
+                cache_len: Array, cfg: LMConfig
+                ) -> Tuple[Array, Params]:
+    """One serving step: token [B, 1] + cache -> (logits [B, V], cache).
+
+    ``cache_len`` is the number of valid positions already in the cache; the
+    new token is written at that offset (static cache shape = max_len).
+    """
+    b = token.shape[0]
+    x = _embed(params, token, cfg)
+
+    def layer(x, lp, cache_l):
+        h = rms_norm(x, lp["ln1"])
+        if cfg.attn == "mla":
+            out, new_c = attn_mod.mla_decode(lp["attn"], h, cache_l,
+                                             cache_len, mla_config(cfg))
+        else:
+            out, new_c = attn_mod.gqa_decode(
+                lp["attn"], h, cache_l, cache_len, n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_kv_heads, d_head=cfg.d_head,
+                rope_theta=cfg.rope_theta)
+        x = x + out
+        h = rms_norm(x, lp["ln2"])
+        if cfg.moe:
+            f, _ = moe_mod.moe_forward(lp["ffn"], h, moe_config(cfg),
+                                       shard=cfg.moe_shard)
+        else:
+            f = swiglu(h, lp["ffn"]["w_gate"], lp["ffn"]["w_up"],
+                       lp["ffn"]["w_down"])
+        return x + f, new_c
+
+    if cfg.scan_layers:
+        # cache rides in the CARRY (updated in place per layer via dynamic
+        # index) — as scan xs/ys it would double-buffer the whole cache,
+        # which at 32k context is tens of GiB of pointless temp.
+        def body(carry, xs):
+            x, cache = carry
+            lp, i = xs
+            cache_l = jax.tree.map(
+                lambda t: jax.lax.dynamic_index_in_dim(t, i, 0,
+                                                       keepdims=False),
+                cache)
+            x, new_c = layer(x, lp, cache_l)
+            cache = jax.tree.map(
+                lambda t, nc: jax.lax.dynamic_update_index_in_dim(
+                    t, nc.astype(t.dtype), i, 0), cache, new_c)
+            return (x, cache), None
+
+        (x, new_cache), _ = jax.lax.scan(
+            body, (x, cache),
+            (params["layers"], jnp.arange(cfg.n_layers)))
+    else:
+        outs = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda t: t[i], params["layers"])
+            cl = jax.tree.map(lambda t: t[i], cache)
+            x, nc = layer(x, lp, cl)
+            outs.append(nc)
+        new_cache = jax.tree.map(lambda *ls: jnp.stack(ls), *outs)
+    logits = _logits(params, x[:, 0], cfg)
+    return logits, new_cache
+
+
+def prefill(params: Params, tokens: Array, cfg: LMConfig,
+            max_len: int = 0) -> Tuple[Array, Params, Array]:
+    """Prompt pass: tokens [B, S] -> (last logits [B, V], cache, cache_len).
+
+    ``cfg.prefill_microbatch`` > 0 processes the batch in chunks (bounds the
+    MoE dispatch buffers and score memory at 32k-token prompts).
+    """
+    b, s = tokens.shape
+    max_len = max_len or s
+    mb = cfg.prefill_microbatch or b
+    n_chunks = max(b // mb, 1)
+
+    def run(chunk_tokens):
+        bb, ss = chunk_tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(ss, dtype=jnp.int32),
+                                     (bb, ss))
+        x = _embed(params, chunk_tokens, cfg)
+
+        def body(x, lp):
+            x, _, cache = _layer_forward(lp, x, cfg, positions, True)
+            return x, cache
+
+        if cfg.scan_layers:
+            x, caches = jax.lax.scan(body, x, params["layers"])
+        else:
+            outs = []
+            for i in range(cfg.n_layers):
+                lp = jax.tree.map(lambda t: t[i], params["layers"])
+                x, c = body(x, lp)
+                outs.append(c)
+            caches = jax.tree.map(lambda *ls: jnp.stack(ls), *outs)
+        logits = _logits(params, x[:, -1], cfg)
+
+        def pad(c):                     # [L, B, ..., S, D] -> max_len on -2
+            if max_len == s:
+                return c
+            pads = [(0, 0)] * c.ndim
+            pads[-2] = (0, max_len - s)
+            return jnp.pad(c, pads)
+
+        return logits, jax.tree.map(pad, caches)
+
+    if n_chunks == 1:
+        logits, cache = run(tokens)
+    else:
+        chunks = tokens.reshape(n_chunks, mb, s)
+        logits, cache = jax.lax.map(run, chunks)
+        logits = logits.reshape(b, -1)
+        # [C, L, mb, ...] -> [L, C*mb, ...]
+        cache = jax.tree.map(
+            lambda c: jnp.moveaxis(c, 0, 1).reshape(
+                (c.shape[1], b) + c.shape[3:]), cache)
+    return logits, cache, jnp.asarray(s, jnp.int32)

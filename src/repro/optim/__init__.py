@@ -1,0 +1,5 @@
+"""Optimizers + large-scale distributed-training tricks."""
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig, adamw_init, adamw_update, apply_updates, clip_by_global_norm,
+    warmup_cosine,
+)

@@ -1,0 +1,90 @@
+"""AdamW with fully-sharded states (hand-rolled; no optax on this box).
+
+Moments live in float32 and inherit the parameter's PartitionSpec, so under
+FSDP the optimizer state is sharded exactly like the parameters (ZeRO-3
+posture).  ``count`` is a replicated scalar.
+
+The update is the decoupled-weight-decay form (Loshchilov & Hutter) with
+bias-corrected moments; gradient clipping is by global norm across the whole
+tree (one psum-able scalar).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def adamw_init(params) -> dict:
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return dict(
+        m=jax.tree.map(zeros32, params),
+        v=jax.tree.map(zeros32, params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    gnorm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gnorm
+
+
+def adamw_update(grads, state: dict, params, cfg: AdamWConfig,
+                 lr: jax.Array | float | None = None
+                 ) -> Tuple[Any, dict, jax.Array]:
+    """Returns (new_params, new_state, pre-clip grad norm)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    count = state["count"] + 1
+    t = count.astype(jnp.float32)
+    lr = cfg.lr if lr is None else lr
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g32
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
+        step = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, dict(m=new_m, v=new_v, count=count), gnorm
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.1):
+    """Linear warmup then cosine decay to ``floor * peak_lr``."""
+    t = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = peak_lr * jnp.minimum(t / max(warmup, 1), 1.0)
+    frac = jnp.clip((t - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(t < warmup, warm, peak_lr * cos)

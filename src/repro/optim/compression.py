@@ -1,0 +1,109 @@
+"""Gradient compression for cross-pod sync: error-feedback int8 + top-k.
+
+At 1000+ nodes the once-per-step gradient all-reduce over the ``pod`` axis
+dominates inter-pod ICI traffic.  Two standard compressors, both with
+error feedback (the quantization/sparsification residual is carried to the
+next step, which keeps SGD convergence — Karimireddy et al. 2019):
+
+  int8:  per-tensor symmetric scale, 4x fewer bytes on the wire;
+  topk:  keep the largest |g| fraction per tensor, 1/frac fewer bytes.
+
+``compress_tree`` -> (payload tree, new error tree); the payload is what a
+launcher would all-reduce across pods; ``decompress_tree`` restores f32.
+The roundtrip (decompress . compress) is exposed for in-step use so the
+numerics are exercised end-to-end even on one host.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    kind: str = "int8"               # "int8" | "topk" | "none"
+    topk_frac: float = 0.01
+
+
+def ef_init(params):
+    """Zero error-feedback buffers shaped like the grads (f32)."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _int8_compress(g: Array) -> Tuple[dict, Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return dict(q=q, scale=scale), g - deq
+
+
+def _int8_decompress(payload: dict) -> Array:
+    return payload["q"].astype(jnp.float32) * payload["scale"]
+
+
+def _topk_compress(g: Array, frac: float) -> Tuple[dict, Array]:
+    flat = g.reshape(-1)
+    k = max(1, int(flat.shape[0] * frac))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    kept = flat[idx]
+    deq = jnp.zeros_like(flat).at[idx].set(kept)
+    return dict(idx=idx.astype(jnp.int32), vals=kept,
+                shape=g.shape), g - deq.reshape(g.shape)
+
+
+def _topk_decompress(payload: dict) -> Array:
+    flat_len = 1
+    for s in payload["shape"]:
+        flat_len *= s
+    out = jnp.zeros((flat_len,), jnp.float32).at[payload["idx"]].set(
+        payload["vals"])
+    return out.reshape(payload["shape"])
+
+
+def compress_tree(grads, err, cfg: CompressionConfig):
+    """(grads + err) -> (payload tree, new err tree)."""
+    if cfg.kind == "none":
+        return grads, err
+    leaves, treedef = jax.tree.flatten(grads)
+    err_leaves = treedef.flatten_up_to(err)
+    payloads, new_err = [], []
+    for g, e in zip(leaves, err_leaves):
+        corrected = g.astype(jnp.float32) + e
+        if cfg.kind == "int8":
+            p, r = _int8_compress(corrected)
+        elif cfg.kind == "topk":
+            p, r = _topk_compress(corrected, cfg.topk_frac)
+        else:
+            raise ValueError(cfg.kind)
+        payloads.append(p)
+        new_err.append(r)
+    return treedef.unflatten(payloads), treedef.unflatten(new_err)
+
+
+def decompress_tree(payloads, cfg: CompressionConfig, like=None):
+    if cfg.kind == "none":
+        return payloads
+    fn = _int8_decompress if cfg.kind == "int8" else _topk_decompress
+    return jax.tree.map(fn, payloads,
+                        is_leaf=lambda x: isinstance(x, dict) and
+                        ("q" in x or "idx" in x))
+
+
+def roundtrip(grads, err, cfg: CompressionConfig):
+    """compress -> decompress (what each pod sees after the wire)."""
+    payloads, err = compress_tree(grads, err, cfg)
+    return decompress_tree(payloads, cfg), err
+
+
+def wire_bytes(payloads, cfg: CompressionConfig) -> int:
+    """Bytes a pod puts on the cross-pod link for this payload tree."""
+    total = 0
+    for leaf in jax.tree.leaves(payloads):
+        if hasattr(leaf, "size") and hasattr(leaf, "dtype"):
+            total += leaf.size * leaf.dtype.itemsize     # skip static shapes
+    return total

@@ -1,0 +1,68 @@
+"""Hierarchical sparse-update accumulator — the paper's technique as a
+first-class optimizer feature.
+
+Any row-sparse gradient/statistic stream (embedding tables, MoE router
+counts, vocab-embedding grads) can be routed through a HierVec accumulator:
+per-step updates are block-added into the small fast layer (VMEM-resident
+on TPU); the large master array in HBM is only touched when the spill
+cascade reaches it.  This is exactly Fig 2 of the paper, remapped from
+"cache vs DRAM" to "VMEM vs HBM" — see DESIGN.md §2.
+
+API:
+    acc   = SparseAccumulator.create(cuts, block, dim)
+    acc   = acc.add(keys, vals [, mask])          # fast-memory block update
+    acc, table = acc.apply_if_pressured(table, scale)   # cascade-driven
+    acc, table = acc.drain(table, scale)                # forced full apply
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import vassoc
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SparseAccumulator:
+    hier: vassoc.HierVec
+
+    @classmethod
+    def create(cls, cuts: Tuple[int, ...], block_size: int, dim: int,
+               dtype=jnp.float32) -> "SparseAccumulator":
+        return cls(hier=vassoc.create(cuts, block_size, dim, dtype))
+
+    def add(self, keys: Array, vals: Array,
+            mask: Array | None = None) -> "SparseAccumulator":
+        return SparseAccumulator(vassoc.update(self.hier, keys, vals, mask))
+
+    def pending(self) -> Array:
+        return jnp.sum(self.hier.nnz_per_layer())
+
+    def pressured(self) -> Array:
+        last = self.hier.layers[-1]
+        return last.nnz > self.hier.cuts[-1]
+
+    def apply_if_pressured(self, table: Array, scale: float | Array = 1.0
+                           ) -> Tuple["SparseAccumulator", Array]:
+        def drain(args):
+            h, t = args
+            return vassoc.drain_to_table(h, t, scale)
+
+        hier, table = jax.lax.cond(self.pressured(), drain, lambda a: a,
+                                   (self.hier, table))
+        return SparseAccumulator(hier), table
+
+    def drain(self, table: Array, scale: float | Array = 1.0
+              ) -> Tuple["SparseAccumulator", Array]:
+        hier, table = vassoc.drain_to_table(self.hier, table, scale)
+        return SparseAccumulator(hier), table
+
+    def snapshot(self) -> vassoc.VecSegment:
+        """Canonical merged view of all pending mass (query path)."""
+        return vassoc.query_all(self.hier)

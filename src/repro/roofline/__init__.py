@@ -1,0 +1,3 @@
+"""Roofline extraction from compiled dry-run artifacts."""
+from repro.roofline.hlo import collective_bytes_by_type, parse_hlo_collectives  # noqa: F401
+from repro.roofline.terms import HW_V5E, roofline_terms  # noqa: F401

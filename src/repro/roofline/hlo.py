@@ -1,0 +1,74 @@
+"""Parse collective traffic out of post-partitioning HLO text.
+
+``compiled.as_text()`` (after GSPMD) is the PER-DEVICE program: every
+``all-gather`` / ``all-reduce`` / ``reduce-scatter`` / ``all-to-all`` /
+``collective-permute`` line's RESULT shape is the per-device buffer moved
+by that op.  Summing result bytes gives per-device collective bytes; the
+roofline's collective term is then bytes_per_device / link_bw, numerically
+identical to the brief's global_bytes / (chips * link_bw).
+
+Shapes parse from the HLO type syntax ``bf16[2,512,128]{2,1,0}`` including
+tuple results ``(f32[128], f32[128]) all-reduce(...)``.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+
+# one result shape token: dtype[d0,d1,...] with optional layout {..}
+_SHAPE_RE = re.compile(r"\b([a-z]+\d*(?:e\d+m\d+(?:fn)?)?)\[([\d,]*)\]")
+# an HLO instruction line:  %name = <result-type> opcode(...)
+_INSTR_RE = re.compile(
+    r"=\s*(\(?[a-z][^)=]*?\)?)\s+("
+    + "|".join(COLLECTIVES).replace("-", r"\-") + r")\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def parse_hlo_collectives(hlo_text: str) -> Dict[str, Dict[str, int]]:
+    """-> {op_kind: {"bytes": total_result_bytes, "count": n_ops}}."""
+    out: Dict[str, Dict[str, int]] = defaultdict(
+        lambda: dict(bytes=0, count=0))
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        result_types, op = m.group(1), m.group(2)
+        if op + "-start" in line and op + "-done" not in line:
+            pass                           # async start carries the shape
+        total = sum(_shape_bytes(d, dims)
+                    for d, dims in _SHAPE_RE.findall(result_types))
+        out[op]["bytes"] += total
+        out[op]["count"] += 1
+    return dict(out)
+
+
+def collective_bytes_by_type(hlo_text: str) -> Tuple[int, Dict[str, int]]:
+    parsed = parse_hlo_collectives(hlo_text)
+    per_type = {k: v["bytes"] for k, v in parsed.items()}
+    return sum(per_type.values()), per_type
+
+
+def count_op(hlo_text: str, opcode: str) -> int:
+    """Occurrences of an opcode (e.g. 'fusion', 'transpose') — used by the
+    perf loop to spot remat/layout pathologies."""
+    return len(re.findall(rf"\s{re.escape(opcode)}\(", hlo_text))

@@ -1,0 +1,74 @@
+"""Roofline terms from dry-run cost/memory analysis.
+
+TPU v5e per-chip constants (target hardware; this container is CPU-only so
+terms are derived from the compiled artifact, not measured):
+
+    peak bf16 compute  197 TFLOP/s
+    HBM bandwidth      819 GB/s
+    ICI link bandwidth ~50 GB/s per link
+
+All inputs are PER-DEVICE quantities (post-GSPMD HLO is the per-device
+program), so:
+
+    compute    = flops / peak
+    memory     = hbm_bytes / hbm_bw
+    collective = collective_bytes / link_bw
+
+dominant bottleneck = argmax; roofline fraction of a subsequent
+optimization = dominant_before / dominant_after.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+HW_V5E = dict(
+    name="tpu_v5e",
+    peak_flops=197e12,          # bf16 FLOP/s per chip
+    hbm_bw=819e9,               # bytes/s per chip
+    link_bw=50e9,               # bytes/s per ICI link
+    hbm_bytes=16 * 2**30,       # capacity, for fit checks
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = dict(compute=self.compute_s, memory=self.memory_s,
+                     collective=self.collective_s)
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> Dict[str, float]:
+        return dict(compute_s=self.compute_s, memory_s=self.memory_s,
+                    collective_s=self.collective_s, dominant=self.dominant)
+
+
+def roofline_terms(flops_per_device: float, hbm_bytes_per_device: float,
+                   collective_bytes_per_device: float,
+                   hw: dict = HW_V5E) -> RooflineTerms:
+    return RooflineTerms(
+        compute_s=flops_per_device / hw["peak_flops"],
+        memory_s=hbm_bytes_per_device / hw["hbm_bw"],
+        collective_s=collective_bytes_per_device / hw["link_bw"])
+
+
+def model_flops_lm(n_params: int, n_active_params: int, tokens: int,
+                   train: bool) -> float:
+    """6·N_active·D for train, 2·N_active·D for inference forward."""
+    mult = 6.0 if train else 2.0
+    return mult * n_active_params * tokens
+
+
+def useful_fraction(model_flops: float, hlo_flops_global: float) -> float:
+    """MODEL_FLOPS / HLO_FLOPs — how much compiled compute is 'useful'
+    (catches remat recompute, dispatch overhead, padding waste)."""
+    return model_flops / max(hlo_flops_global, 1.0)

@@ -1,0 +1,3 @@
+"""Runtime resilience: stragglers, failures, elastic instance placement."""
+from repro.runtime.straggler import StragglerMonitor  # noqa: F401
+from repro.runtime.elastic import rebalance_instances  # noqa: F401

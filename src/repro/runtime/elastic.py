@@ -1,0 +1,110 @@
+"""Elastic scaling of D4M instance fleets and training state.
+
+Node loss / fleet resize changes the device count from N_old to N_new.
+Because every distributed structure here keys its placement off a LEADING
+instance/batch dim and checkpoints are device-agnostic numpy trees
+(checkpoint/ckpt.py), elastic restart is:
+
+  1. restore the checkpoint under the NEW mesh's shardings (the restore
+     path device_puts under whatever sharding is passed — no special case);
+  2. for D4M instance fleets, re-assign instances to devices by consistent
+     hashing (core/distributed.instance_assignment) so only ~1/N of the
+     streams re-route;
+  3. resume the step loop.
+
+``rebalance_instances`` additionally supports changing the INSTANCE count
+(scale the fleet itself): grown fleets get fresh empty hierarchies for the
+new ids; shrunk fleets fold surplus instances' state into the survivors by
+semiring merge (no updates are lost — the paper's associativity guarantee
+is exactly what makes this legal).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hier
+from repro.core import semiring as sr_mod
+from repro.core.hier import HierAssoc
+from repro.core.semiring import Semiring
+
+
+def _grow_last_layer(states: HierAssoc, extra: int) -> HierAssoc:
+    """Pad every instance's deepest layer with ``extra`` sentinel slots."""
+    import dataclasses
+    from repro.core.assoc import SENTINEL
+
+    last = states.layers[-1]
+    n_inst = last.hi.shape[0]
+    pad_i = jnp.full((n_inst, extra), SENTINEL, jnp.int32)
+    pad_v = jnp.zeros((n_inst, extra), last.val.dtype)
+    grown = last.__class__(
+        hi=jnp.concatenate([last.hi, pad_i], axis=1),
+        lo=jnp.concatenate([last.lo, pad_i], axis=1),
+        val=jnp.concatenate([last.val, pad_v], axis=1),
+        nnz=last.nnz)
+    return dataclasses.replace(states,
+                               layers=states.layers[:-1] + (grown,))
+
+
+def _merge_instance_into(states: HierAssoc, src: int, dst: int,
+                         sr: Semiring) -> HierAssoc:
+    """Fold instance ``src``'s hierarchy into instance ``dst``: every src
+    layer semiring-merges into dst's deepest layer (associative, exact)."""
+    from repro.core import assoc
+
+    src_state = jax.tree.map(lambda x: x[src], states)
+    dst_state = jax.tree.map(lambda x: x[dst], states)
+    last = dst_state.layers[-1]
+    overflow = dst_state.overflow
+    for layer in src_state.layers:
+        last, ovf = assoc.merge(last, layer, last.capacity, sr)
+        overflow = overflow + ovf
+    merged = dst_state.__class__(
+        layers=dst_state.layers[:-1] + (last,),
+        spills=dst_state.spills,
+        overflow=overflow,
+        n_updates=dst_state.n_updates + src_state.n_updates,
+        cuts=dst_state.cuts)
+    return jax.tree.map(
+        lambda full, one: full.at[dst].set(one), states, merged)
+
+
+def rebalance_instances(states: HierAssoc, n_new: int,
+                        sr: Semiring = sr_mod.PLUS_TIMES,
+                        sharding: Optional[jax.sharding.NamedSharding] = None
+                        ) -> HierAssoc:
+    """Resize an instance-batched fleet to ``n_new`` instances.
+
+    Grow: append empty hierarchies (new ids start cold).
+    Shrink: surplus instance i >= n_new folds into instance i % n_new by
+    semiring merge — associativity makes the fold exact.
+    """
+    n_old = states.layers[0].hi.shape[0]
+    if n_new == n_old:
+        out = states
+    elif n_new > n_old:
+        one = hier.create(states.cuts,
+                          states.layers[0].capacity - states.cuts[0],
+                          states.layers[0].val.dtype)
+        fresh = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_new - n_old,) + x.shape),
+            one)
+        out = jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b], axis=0), states, fresh)
+    else:
+        # a survivor absorbs ceil(n_old/n_new - 1) whole hierarchies: give
+        # every instance's DEEPEST layer that much extra static capacity
+        # first, so the fold is lossless (shapes stay uniform across the
+        # batched pytree).
+        folds = -(-n_old // n_new) - 1
+        extra = folds * sum(l.capacity for l in states.layers)
+        out = _grow_last_layer(states, extra)
+        for src in range(n_new, n_old):
+            out = _merge_instance_into(out, src, src % n_new, sr)
+        out = jax.tree.map(lambda x: x[:n_new], out)
+    if sharding is not None:
+        out = jax.tree.map(lambda x: jax.device_put(x, sharding), out)
+    return out

@@ -1,0 +1,131 @@
+"""Unit + property tests for the hierarchical layer stack (paper Fig 2)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import assoc, hier, semiring, stream
+
+
+def _stream(seed, steps, block, nkeys):
+    rng = np.random.default_rng(seed)
+    R = jnp.asarray(rng.integers(0, nkeys, (steps, block)), jnp.int32)
+    C = jnp.asarray(rng.integers(0, nkeys, (steps, block)), jnp.int32)
+    V = jnp.asarray(rng.normal(size=(steps, block)), jnp.float32)
+    return R, C, V
+
+
+def _dense(R, C, V, n):
+    out = np.zeros((n, n), np.float64)
+    for r, c, v in zip(np.asarray(R).ravel(), np.asarray(C).ravel(),
+                       np.asarray(V).ravel()):
+        out[r, c] += v
+    return out
+
+
+def test_hier_equals_flat_accumulation():
+    R, C, V = _stream(0, steps=40, block=8, nkeys=25)
+    h = hier.create((16, 64, 256), block_size=8)
+    hf, telem = stream.ingest(h, R, C, V)
+    merged = hier.query_all(hf)
+    np.testing.assert_allclose(
+        np.asarray(assoc.to_dense(merged, 25, 25)), _dense(R, C, V, 25),
+        rtol=1e-4, atol=1e-5)
+    assert int(hf.overflow) == 0
+    assert int(hf.n_updates) == 40 * 8
+
+
+def test_cut_invariant_after_every_step():
+    """After each update+cascade, every non-last layer holds nnz <= cut."""
+    R, C, V = _stream(1, steps=30, block=16, nkeys=1000)
+    h = hier.create((8, 32, 4096), block_size=16)
+
+    def step(state, blk):
+        state = hier.update(state, *blk)
+        return state, state.nnz_per_layer()
+
+    _, nnzs = jax.lax.scan(step, h, (R, C, V))
+    nnzs = np.asarray(nnzs)
+    assert np.all(nnzs[:, 0] <= 8), nnzs[:, 0].max()
+    assert np.all(nnzs[:, 1] <= 32), nnzs[:, 1].max()
+
+
+def test_spills_amortize_slow_memory_updates():
+    """The paper's core claim: most updates never reach the big/slow array."""
+    R, C, V = _stream(2, steps=200, block=32, nkeys=10**6)  # ~all unique
+    h = hier.create((64, 1024, 10**5), block_size=32)
+    hf, _ = stream.ingest(h, R, C, V)
+    spills = np.asarray(hf.spills)
+    # layer0 spills often; the big layer receives ~1/16 as many block events
+    assert spills[1] * 8 <= spills[0]
+    assert int(hf.overflow) == 0
+
+
+def test_overflow_counted_not_crashed():
+    R, C, V = _stream(3, steps=64, block=16, nkeys=10**6)
+    h = hier.create((8, 16, 32), block_size=16)   # tiny last layer
+    hf, _ = stream.ingest(h, R, C, V)
+    assert int(hf.overflow) > 0
+
+
+def test_flush_moves_everything_down():
+    R, C, V = _stream(4, steps=10, block=8, nkeys=50)
+    h = hier.create((16, 64, 512), block_size=8)
+    hf, _ = stream.ingest(h, R, C, V)
+    flushed = hier.flush(hf)
+    nnz = np.asarray(flushed.nnz_per_layer())
+    assert np.all(nnz[:-1] == 0)
+    np.testing.assert_allclose(
+        np.asarray(assoc.to_dense(hier.query_all(flushed), 50, 50)),
+        _dense(R, C, V, 50), rtol=1e-4, atol=1e-5)
+
+
+def test_lookup_across_layers():
+    h = hier.create((2, 8, 64), block_size=4)
+    # same key pushed through several spills
+    for i in range(6):
+        h = hier.update(h, jnp.full((4,), 3, jnp.int32),
+                        jnp.full((4,), 7, jnp.int32), jnp.ones((4,)))
+    assert float(hier.lookup(h, 3, 7)) == 24.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    cuts=st.lists(st.integers(2, 6), min_size=1, max_size=3),
+    steps=st.integers(1, 12),
+    nkeys=st.integers(1, 40),
+    seed=st.integers(0, 2**16),
+)
+def test_property_hier_equals_dense(cuts, steps, nkeys, seed):
+    """For arbitrary cut stacks and streams, hierarchy == flat accumulation."""
+    cuts = tuple(np.cumsum(np.asarray(cuts) * 8).tolist())  # strictly increasing
+    block = 8
+    R, C, V = _stream(seed, steps, block, nkeys)
+    h = hier.create(cuts + (10**5,), block_size=block)
+    hf, _ = stream.ingest(h, R, C, V)
+    got = np.asarray(assoc.to_dense(hier.query_all(hf), nkeys, nkeys))
+    np.testing.assert_allclose(got, _dense(R, C, V, nkeys), rtol=1e-4,
+                               atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_property_max_semiring(seed):
+    sr = semiring.MAX_PLUS
+    rng = np.random.default_rng(seed)
+    R = jnp.asarray(rng.integers(0, 10, (8, 4)), jnp.int32)
+    C = jnp.asarray(rng.integers(0, 10, (8, 4)), jnp.int32)
+    V = jnp.asarray(rng.normal(size=(8, 4)), jnp.float32)
+    h = hier.create((4, 64), block_size=4, sr=sr)
+    for t in range(8):
+        h = hier.update(h, R[t], C[t], V[t], sr=sr)
+    got = np.asarray(assoc.to_dense(hier.query_all(h, sr), 10, 10, sr))
+    want = np.full((10, 10), -np.inf)
+    for r, c, v in zip(np.asarray(R).ravel(), np.asarray(C).ravel(),
+                       np.asarray(V).ravel()):
+        want[r, c] = max(want[r, c], v)
+    m = ~np.isinf(want)
+    np.testing.assert_allclose(got[m], want[m], rtol=1e-5)

@@ -1,0 +1,71 @@
+"""Shape/dtype sweeps: embedding_bag Pallas kernel vs jnp oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.embedding_bag import ops, ref
+
+
+def run(seed, vocab, d, bags, bag_size, dtype=np.float32, combiner="sum",
+        with_mask=True, with_weights=False):
+    rng = np.random.default_rng(seed)
+    table = jnp.asarray(rng.normal(size=(vocab, d)), dtype)
+    idx = jnp.asarray(rng.integers(0, vocab, (bags, bag_size)), jnp.int32)
+    mask = jnp.asarray(rng.random((bags, bag_size)) > 0.25) if with_mask else None
+    w = (jnp.asarray(rng.normal(size=(bags, bag_size)), jnp.float32)
+         if with_weights else None)
+    got = ops.embedding_bag(table, idx, weights=w, mask=mask,
+                            combiner=combiner)
+    want = ops.embedding_bag(table, idx, weights=w, mask=mask,
+                             combiner=combiner, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5 if dtype == np.float32 else 2e-2,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("vocab,d,bags,bag_size", [
+    (100, 8, 4, 2), (1000, 16, 16, 4), (5000, 32, 8, 8),
+    (257, 128, 4, 3), (10_000, 64, 32, 1),
+])
+def test_shape_sweep(vocab, d, bags, bag_size):
+    run(0, vocab, d, bags, bag_size)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_dtype_sweep(dtype):
+    run(1, 500, 16, 8, 4, dtype=dtype)
+
+
+@pytest.mark.parametrize("combiner", ["sum", "mean"])
+def test_combiners(combiner):
+    run(2, 300, 16, 8, 4, combiner=combiner)
+
+
+def test_per_sample_weights():
+    run(3, 300, 16, 8, 4, with_weights=True)
+
+
+def test_all_masked_bag_is_zero():
+    table = jnp.ones((10, 4), jnp.float32)
+    idx = jnp.zeros((2, 3), jnp.int32)
+    mask = jnp.array([[False] * 3, [True] * 3])
+    out = ops.embedding_bag(table, idx, mask=mask)
+    np.testing.assert_allclose(np.asarray(out[0]), 0.0)
+    np.testing.assert_allclose(np.asarray(out[1]), 3.0)
+
+
+def test_out_of_range_indices_clamped():
+    table = jnp.asarray(np.arange(40).reshape(10, 4), jnp.float32)
+    idx = jnp.array([[99, -5]], jnp.int32)
+    out = ops.embedding_bag(table, idx)
+    want = np.asarray(table[9]) + np.asarray(table[0])
+    np.testing.assert_allclose(np.asarray(out[0]), want)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**20), vocab=st.integers(2, 2000),
+       d=st.sampled_from([8, 16, 64]), bags=st.integers(1, 16),
+       bag_size=st.integers(1, 8))
+def test_property_matches_ref(seed, vocab, d, bags, bag_size):
+    run(seed, vocab, d, bags, bag_size)

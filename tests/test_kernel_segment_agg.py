@@ -1,0 +1,70 @@
+"""Shape/dtype sweeps: segment_agg Pallas kernel vs jnp oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.segment_agg import ops, ref
+
+
+def run(seed, e, d, n, dtype=np.float32, tn=128, kb=128, skew=False):
+    rng = np.random.default_rng(seed)
+    msg = jnp.asarray(rng.normal(size=(e, d)), dtype)
+    if skew:  # power-law-ish destination distribution (hot node 0)
+        seg = jnp.asarray(
+            np.minimum(rng.zipf(1.5, e) - 1, n - 1), jnp.int32)
+    else:
+        seg = jnp.asarray(rng.integers(0, n, e), jnp.int32)
+    got = ops.segment_sum(msg, seg, num_segments=n, tn=tn, kb=kb)
+    want = ref.segment_sum_ref(msg, seg, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4 if dtype == np.float32 else 2e-2,
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("e,d,n", [
+    (100, 8, 50), (700, 32, 300), (2000, 64, 128), (513, 16, 1000),
+    (4096, 128, 256),
+])
+def test_shape_sweep(e, d, n):
+    run(0, e, d, n)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_dtype_sweep(dtype):
+    run(1, 600, 16, 100, dtype=dtype)
+
+
+@pytest.mark.parametrize("tn,kb", [(64, 64), (128, 256), (256, 128)])
+def test_tile_sweep(tn, kb):
+    run(2, 1000, 32, 200, tn=tn, kb=kb)
+
+
+def test_power_law_destinations():
+    run(3, 3000, 16, 500, skew=True)
+
+
+def test_empty_segments_and_padding_ids():
+    msg = jnp.ones((10, 4), jnp.float32)
+    seg = jnp.asarray([0, 0, 5, 5, 5, 99, 99, 120, -1, 7], jnp.int32)
+    out = ops.segment_sum(msg, seg, num_segments=100)
+    want = np.zeros((100, 4))
+    want[0] = 2; want[5] = 3; want[99] = 2; want[7] = 1  # 120/-1 dropped
+    np.testing.assert_allclose(np.asarray(out), want)
+
+
+def test_presorted_fast_path():
+    rng = np.random.default_rng(4)
+    seg = jnp.asarray(np.sort(rng.integers(0, 64, 500)), jnp.int32)
+    msg = jnp.asarray(rng.normal(size=(500, 8)), jnp.float32)
+    got = ops.segment_sum(msg, seg, num_segments=64, assume_sorted=True)
+    want = ref.segment_sum_ref(msg, seg, 64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5,
+                               atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**20), e=st.integers(1, 800),
+       d=st.sampled_from([4, 16, 32]), n=st.integers(1, 400))
+def test_property_matches_ref(seed, e, d, n):
+    run(seed, e, d, n)

@@ -1,0 +1,108 @@
+"""AdamW math, schedules, compression, sparse accumulator."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               clip_by_global_norm, warmup_cosine)
+from repro.optim.compression import (CompressionConfig, compress_tree,
+                                     decompress_tree, ef_init, roundtrip,
+                                     wire_bytes)
+from repro.optim.sparse_update import SparseAccumulator
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_adamw_matches_manual_formula():
+    cfg = AdamWConfig(lr=0.1, b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.01,
+                      clip_norm=1e9)
+    p = dict(w=jnp.array([1.0, -2.0, 3.0]))
+    g = dict(w=jnp.array([0.1, 0.2, -0.3]))
+    state = adamw_init(p)
+    p2, state2, gnorm = adamw_update(g, state, p, cfg)
+    m = 0.1 * np.asarray(g["w"])
+    v = 0.01 * np.asarray(g["w"]) ** 2
+    mh, vh = m / 0.1, v / 0.01
+    ref = np.asarray(p["w"]) - 0.1 * (mh / (np.sqrt(vh) + 1e-8)
+                                      + 0.01 * np.asarray(p["w"]))
+    np.testing.assert_allclose(np.asarray(p2["w"]), ref, rtol=1e-6)
+    np.testing.assert_allclose(float(gnorm),
+                               float(jnp.linalg.norm(g["w"])), rtol=1e-6)
+
+
+def test_clip_by_global_norm():
+    g = dict(a=jnp.ones((4,)) * 3.0, b=jnp.ones((3,)) * 4.0)
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    total = np.sqrt(sum(float(jnp.sum(x ** 2))
+                        for x in jax.tree.leaves(clipped)))
+    np.testing.assert_allclose(total, 1.0, rtol=1e-5)
+    np.testing.assert_allclose(float(norm),
+                               np.sqrt(9 * 4 + 16 * 3), rtol=1e-6)
+
+
+def test_warmup_cosine_shape():
+    lrs = [float(warmup_cosine(jnp.asarray(s), peak_lr=1.0, warmup=10,
+                               total=100)) for s in range(0, 101, 10)]
+    assert lrs[0] == 0.0
+    np.testing.assert_allclose(lrs[1], 1.0, rtol=1e-6)   # end of warmup
+    assert all(a >= b - 1e-9 for a, b in zip(lrs[1:], lrs[2:]))
+    np.testing.assert_allclose(lrs[-1], 0.1, rtol=1e-5)  # floor
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from(["int8", "topk"]))
+def test_compression_error_feedback_invariant(seed, kind):
+    """decompressed + new_error == grads + old_error (mass conservation)."""
+    key = jax.random.PRNGKey(seed)
+    g = dict(w=jax.random.normal(key, (64,)))
+    err = dict(w=jax.random.normal(jax.random.fold_in(key, 1), (64,)) * 0.1)
+    cfg = CompressionConfig(kind, topk_frac=0.1)
+    deq, new_err = roundtrip(g, err, cfg)
+    np.testing.assert_allclose(
+        np.asarray(deq["w"] + new_err["w"]),
+        np.asarray(g["w"] + err["w"]), rtol=1e-4, atol=1e-5)
+
+
+def test_compression_wire_savings():
+    g = dict(w=jax.random.normal(KEY, (1024,)))
+    err = ef_init(g)
+    for kind, max_frac in (("int8", 0.3), ("topk", 0.3)):
+        payload, _ = compress_tree(g, err, CompressionConfig(kind,
+                                                             topk_frac=0.05))
+        raw = 1024 * 4
+        assert wire_bytes(payload, CompressionConfig(kind)) < max_frac * raw
+        deq = decompress_tree(payload, CompressionConfig(kind))
+        assert deq["w"].shape == (1024,)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_sparse_accumulator_exactness(seed):
+    """hier-accumulate-then-drain == direct scatter-add, always."""
+    key = jax.random.PRNGKey(seed)
+    table = jnp.zeros((50, 3))
+    direct = table
+    acc = SparseAccumulator.create((8, 32), block_size=16, dim=3)
+    for i in range(6):
+        k = jax.random.fold_in(key, i)
+        keys = jax.random.randint(k, (16,), 0, 50)
+        vals = jax.random.normal(k, (16, 3))
+        acc = acc.add(keys, vals)
+        direct = direct.at[keys].add(vals)
+    acc, table = acc.drain(table, 1.0)
+    np.testing.assert_allclose(np.asarray(table), np.asarray(direct),
+                               rtol=1e-5, atol=1e-6)
+    assert int(acc.pending()) == 0
+
+
+def test_sparse_accumulator_snapshot_merges_layers():
+    acc = SparseAccumulator.create((4, 16), block_size=8, dim=2)
+    for i in range(5):
+        keys = jnp.arange(8, dtype=jnp.int32) + i
+        acc = acc.add(keys, jnp.ones((8, 2)))
+    snap = acc.snapshot()
+    # keys arange(8)+i for i in 0..4 -> union is [0, 12)
+    from repro.core.assoc import SENTINEL
+    live = np.asarray(snap.key) != SENTINEL
+    assert set(np.asarray(snap.key)[live]) == set(range(12))

@@ -1,0 +1,60 @@
+"""HLO collective parser + roofline term math."""
+import numpy as np
+
+from repro.roofline.hlo import (collective_bytes_by_type, count_op,
+                                parse_hlo_collectives)
+from repro.roofline.terms import (HW_V5E, model_flops_lm, roofline_terms,
+                                  useful_fraction)
+
+HLO = """
+HloModule jit_step
+  %p = bf16[2,512,128]{2,1,0} parameter(0)
+  %ag = bf16[2,512,2048]{2,1,0} all-gather(%p), dimensions={2}
+  %ar = f32[1024]{0} all-reduce(%x), to_apply=%add
+  %rs = f32[64,32]{1,0} reduce-scatter(%y), dimensions={0}
+  %a2a = bf16[16,64]{1,0} all-to-all(%z), dimensions={0}
+  %cp = u8[128]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %tup = (f32[8]{0}, f32[8]{0}) all-reduce(%a, %b), to_apply=%add
+  %fusion.1 = f32[4]{0} fusion(%q), kind=kLoop
+  %not_a_collective = f32[9]{0} add(%q, %q)
+"""
+
+
+def test_parse_collectives_by_type():
+    parsed = parse_hlo_collectives(HLO)
+    assert parsed["all-gather"]["bytes"] == 2 * 512 * 2048 * 2
+    assert parsed["all-reduce"]["bytes"] == 1024 * 4 + 2 * 8 * 4
+    assert parsed["all-reduce"]["count"] == 2
+    assert parsed["reduce-scatter"]["bytes"] == 64 * 32 * 4
+    assert parsed["all-to-all"]["bytes"] == 16 * 64 * 2
+    assert parsed["collective-permute"]["bytes"] == 128
+    total, by_type = collective_bytes_by_type(HLO)
+    assert total == sum(v["bytes"] for v in parsed.values())
+    assert count_op(HLO, "fusion") == 1
+
+
+def test_roofline_terms_and_dominance():
+    t = roofline_terms(flops_per_device=197e12, hbm_bytes_per_device=819e9,
+                       collective_bytes_per_device=25e9)
+    np.testing.assert_allclose(t.compute_s, 1.0)
+    np.testing.assert_allclose(t.memory_s, 1.0)
+    np.testing.assert_allclose(t.collective_s, 0.5)
+    assert t.dominant in ("compute", "memory")
+    t2 = roofline_terms(1e12, 1e9, 500e9)
+    assert t2.dominant == "collective"
+
+
+def test_model_flops_and_useful_fraction():
+    assert model_flops_lm(100, 50, 10, train=True) == 6 * 50 * 10
+    assert model_flops_lm(100, 50, 10, train=False) == 2 * 50 * 10
+    assert useful_fraction(50.0, 100.0) == 0.5
+
+
+def test_parser_on_real_compiled_module():
+    """End-to-end: compile a tiny sharded matmul, parser finds the
+    collectives GSPMD inserted."""
+    import jax
+    import jax.numpy as jnp
+    if jax.device_count() < 2:
+        import pytest
+        pytest.skip("single device")

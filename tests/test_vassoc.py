@@ -1,0 +1,89 @@
+"""Property tests: vector-valued associative segments (core/vassoc)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import vassoc
+from repro.core.assoc import SENTINEL
+
+
+def _dict_ref(keys, vals, mask=None):
+    ref = {}
+    for i, k in enumerate(np.asarray(keys)):
+        if mask is not None and not mask[i]:
+            continue
+        ref[int(k)] = ref.get(int(k), 0.0) + np.asarray(vals[i])
+    return ref
+
+
+def _seg_dict(seg):
+    out = {}
+    k = np.asarray(seg.key)
+    v = np.asarray(seg.val)
+    for i in range(int(seg.nnz)):
+        out[int(k[i])] = v[i]
+    return out
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 40), st.integers(1, 4))
+def test_from_rows_matches_dict_reference(seed, n, d):
+    key = jax.random.PRNGKey(seed)
+    keys = jax.random.randint(key, (n,), 0, 12)
+    vals = jax.random.normal(jax.random.fold_in(key, 1), (n, d))
+    seg, ovf = vassoc.from_rows(keys, vals, capacity=64)
+    ref = _dict_ref(keys, vals)
+    got = _seg_dict(seg)
+    assert set(got) == set(ref)
+    for k in ref:
+        np.testing.assert_allclose(got[k], ref[k], rtol=1e-4, atol=1e-5)
+    # canonical form: sorted unique keys, sentinel tail
+    live = np.asarray(seg.key)[:int(seg.nnz)]
+    assert (np.diff(live) > 0).all()
+    assert (np.asarray(seg.key)[int(seg.nnz):] == SENTINEL).all()
+    assert int(ovf) == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_merge_is_additive(seed):
+    key = jax.random.PRNGKey(seed)
+    k1 = jax.random.randint(key, (16,), 0, 10)
+    k2 = jax.random.randint(jax.random.fold_in(key, 1), (16,), 0, 10)
+    v1 = jax.random.normal(jax.random.fold_in(key, 2), (16, 2))
+    v2 = jax.random.normal(jax.random.fold_in(key, 3), (16, 2))
+    a, _ = vassoc.from_rows(k1, v1, 32)
+    b, _ = vassoc.from_rows(k2, v2, 32)
+    m, ovf = vassoc.merge(a, b, 64)
+    ref = _dict_ref(jnp.concatenate([k1, k2]), jnp.concatenate([v1, v2]))
+    got = _seg_dict(m)
+    assert set(got) == set(ref) and int(ovf) == 0
+    for k in ref:
+        np.testing.assert_allclose(got[k], ref[k], rtol=1e-4, atol=1e-5)
+
+
+def test_hiervec_update_cascade_and_drain():
+    h = vassoc.create((8, 32), block_size=8, dim=2)
+    table = jnp.zeros((30, 2))
+    direct = table
+    key = jax.random.PRNGKey(0)
+    for i in range(10):
+        k = jax.random.fold_in(key, i)
+        keys = jax.random.randint(k, (8,), 0, 30)
+        vals = jax.random.normal(k, (8, 2))
+        h = vassoc.update(h, keys, vals)
+        direct = direct.at[keys].add(vals)
+    assert int(jnp.sum(h.spills)) > 0          # cascade actually fired
+    h, table = vassoc.drain_to_table(h, table, 1.0)
+    np.testing.assert_allclose(np.asarray(table), np.asarray(direct),
+                               rtol=1e-4, atol=1e-5)
+    assert int(jnp.sum(h.nnz_per_layer())) == 0
+
+
+def test_masked_rows_are_dropped():
+    keys = jnp.array([1, 2, 3, 4])
+    vals = jnp.ones((4, 2))
+    mask = jnp.array([True, False, True, False])
+    seg, _ = vassoc.from_rows(keys, vals, 8, mask=mask)
+    assert _seg_dict(seg).keys() == {1, 3}
