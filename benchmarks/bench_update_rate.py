@@ -7,11 +7,18 @@ fast layer.  We measure single-instance sustained updates/s for
   * hier      — the layered structure with geometric cuts,
 at the paper's workload shape (power-law R-MAT blocks, lax.scan ingest).
 
-Derived column: updates/s and the hier/flat speedup (the reproduction
-analogue of the paper's "hierarchical arrays dramatically reduce the
-number of updates to slow memory").
+A/B (``--mode``): ``layered`` is the per-layer reference cascade; ``fused``
+is the single-sort fused spill cascade (core/hier.py) with the lazy layer-0
+append and chunked pre-combine — the reproduction of the paper's "update
+cost scales with the fast layer" made concrete.  ``both`` (default) runs the
+two and reports the fused/layered speedup.
+
+Derived columns: updates/s, the hier/flat speedup, and the fused/layered
+speedup.
 """
 from __future__ import annotations
+
+import argparse
 
 import jax
 import jax.numpy as jnp
@@ -20,35 +27,63 @@ from benchmarks.common import Report, timeit
 from repro.core import hier, stream
 from repro.data.powerlaw import rmat_stream
 
+# CPU probe config: c0 large enough that layer-0 spills amortize, deep layer
+# big enough that its (rare) merges dominate neither path.
+PROBE = dict(block=2048, blocks=32, cuts=(32768, 262144), scale=18)
+SMOKE = dict(block=512, blocks=8, cuts=(4096, 32768), scale=14)
 
-def ingest_rate(cuts, block_size, n_blocks, scale=18, seed=0):
+FUSED_CHUNK = 4  # stream blocks pre-combined per fused update
+
+
+def ingest_rate(cuts, block_size, n_blocks, scale=18, seed=0,
+                fused=False, lazy_l0=False, chunk=1):
     key = jax.random.PRNGKey(seed)
     rows, cols, vals = rmat_stream(key, n_blocks, block_size, scale)
     h0 = hier.create(cuts, block_size)
-    run = jax.jit(lambda h, r, c, v: stream.ingest(h, r, c, v)[0])
+    run = jax.jit(lambda h, r, c, v: stream.ingest(
+        h, r, c, v, fused=fused, lazy_l0=lazy_l0, chunk=chunk)[0])
     sec = timeit(run, h0, rows, cols, vals, warmup=1, iters=3)
     return sec, n_blocks * block_size / sec
 
 
-def main(report: Report | None = None):
+def main(report: Report | None = None, mode: str = "both",
+         smoke: bool = False):
     report = report or Report()
-    block, blocks = 4096, 32
-    cuts = (8192, 65536, 524288)
+    cfg = SMOKE if smoke else PROBE
+    block, blocks = cfg["block"], cfg["blocks"]
+    cuts, scale = cfg["cuts"], cfg["scale"]
     flat_cuts = (cuts[-1],)          # single large layer
 
-    sec_h, rate_h = ingest_rate(cuts, block, blocks)
-    sec_f, rate_f = ingest_rate(flat_cuts, block, blocks)
-    report.add("update_rate_hier", sec_h / blocks,
-               f"{rate_h:,.0f} upd/s")
-    report.add("update_rate_flat", sec_f / blocks,
-               f"{rate_f:,.0f} upd/s")
-    report.add("update_rate_speedup", 0.0,
-               f"hier/flat = {rate_h / rate_f:.2f}x")
-    return dict(rate_hier=rate_h, rate_flat=rate_f,
-                speedup=rate_h / rate_f)
+    out = {}
+    if mode in ("layered", "both"):
+        sec_h, rate_h = ingest_rate(cuts, block, blocks, scale)
+        sec_f, rate_f = ingest_rate(flat_cuts, block, blocks, scale)
+        report.add("update_rate_hier", sec_h / blocks, f"{rate_h:,.0f} upd/s")
+        report.add("update_rate_flat", sec_f / blocks, f"{rate_f:,.0f} upd/s")
+        report.add("update_rate_speedup", 0.0,
+                   f"hier/flat = {rate_h / rate_f:.2f}x")
+        out.update(rate_hier=rate_h, rate_flat=rate_f,
+                   speedup=rate_h / rate_f)
+    if mode in ("fused", "both"):
+        sec_u, rate_u = ingest_rate(cuts, block, blocks, scale, fused=True,
+                                    lazy_l0=True, chunk=FUSED_CHUNK)
+        report.add("update_rate_fused", sec_u / blocks, f"{rate_u:,.0f} upd/s")
+        out.update(rate_fused=rate_u)
+    if mode == "both":
+        report.add("update_rate_fused_speedup", 0.0,
+                   f"fused/layered = {out['rate_fused'] / out['rate_hier']:.2f}x")
+        out.update(fused_speedup=out["rate_fused"] / out["rate_hier"])
+    return out
 
 
 if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--mode", choices=("layered", "fused", "both"),
+                    default="both", help="A/B: reference layered cascade vs "
+                    "single-sort fused cascade")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small config for CI (~seconds)")
+    args = ap.parse_args()
     r = Report()
     r.header()
-    main(r)
+    main(r, mode=args.mode, smoke=args.smoke)

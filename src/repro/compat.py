@@ -1,0 +1,47 @@
+"""Version portability shims for the JAX API surface we depend on.
+
+The repo targets both the 0.4.x line (where ``shard_map`` lives in
+``jax.experimental.shard_map`` and takes ``check_rep``) and newer releases
+(where it is ``jax.shard_map`` and the flag was renamed ``check_vma``).
+Everything that places instances on a mesh goes through this module so the
+rest of the codebase can use one spelling.
+
+Exports:
+    shard_map       -- accepts ``check_vma`` and translates as needed
+    P               -- jax.sharding.PartitionSpec
+    NamedSharding   -- jax.sharding.NamedSharding
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = ["shard_map", "P", "NamedSharding"]
+
+if hasattr(jax, "shard_map"):                      # JAX >= 0.5
+    _shard_map_impl = jax.shard_map
+else:                                              # JAX 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+_ACCEPTS_CHECK_VMA = "check_vma" in inspect.signature(_shard_map_impl).parameters
+
+
+def shard_map(f=None, *, mesh, in_specs, out_specs, check_vma=True, **kwargs):
+    """Portable ``shard_map``: new-style ``check_vma`` flag on any JAX.
+
+    Usable directly or as ``functools.partial(shard_map, mesh=..., ...)``
+    the same way ``jax.shard_map`` is.
+    """
+    if f is None:
+        return functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=check_vma,
+                                 **kwargs)
+    if _ACCEPTS_CHECK_VMA:
+        kwargs["check_vma"] = check_vma
+    else:
+        kwargs["check_rep"] = check_vma
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, **kwargs)

@@ -127,10 +127,11 @@ def _canonicalize(hi: Array, lo: Array, val: Array, out_capacity: int,
     return AssocSegment(out_hi, out_lo, out_val, nnz), overflow
 
 
-def from_coo(rows: Array, cols: Array, vals: Array, capacity: int,
-             sr: Semiring = sr_mod.PLUS_TIMES,
-             mask: Array | None = None) -> Tuple[AssocSegment, Array]:
-    """Build a canonical segment from an (unsorted, possibly duplicated) block."""
+def mask_coo(rows: Array, cols: Array, vals: Array,
+             mask: Array | None, sr: Semiring
+             ) -> Tuple[Array, Array, Array]:
+    """int32-cast a COO block and blank masked-out entries to the SENTINEL
+    key / semiring zero (the canonical 'ignore me' encoding)."""
     rows = rows.astype(jnp.int32)
     cols = cols.astype(jnp.int32)
     if mask is not None:
@@ -138,6 +139,14 @@ def from_coo(rows: Array, cols: Array, vals: Array, capacity: int,
         rows = jnp.where(mask, rows, SENTINEL)
         cols = jnp.where(mask, cols, SENTINEL)
         vals = jnp.where(mask, vals, zero)
+    return rows, cols, vals
+
+
+def from_coo(rows: Array, cols: Array, vals: Array, capacity: int,
+             sr: Semiring = sr_mod.PLUS_TIMES,
+             mask: Array | None = None) -> Tuple[AssocSegment, Array]:
+    """Build a canonical segment from an (unsorted, possibly duplicated) block."""
+    rows, cols, vals = mask_coo(rows, cols, vals, mask, sr)
     return _canonicalize(rows, cols, vals, capacity, sr)
 
 
@@ -165,6 +174,39 @@ def merge_kernel(a: AssocSegment, b: AssocSegment, out_capacity: int,
         a.hi, a.lo, a.val, b.hi, b.lo, b.val.astype(a.val.dtype),
         out_capacity=out_capacity, sr_name=sr.name)
     return AssocSegment(hi, lo, val, nnz), ovf
+
+
+def merge_many(segments, hi: Array, lo: Array, val: Array, *,
+               out_capacity: int, sr: Semiring = sr_mod.PLUS_TIMES,
+               use_kernel: bool = False) -> Tuple[AssocSegment, Array]:
+    """Semiring-merge k canonical segments plus one RAW (unsorted, possibly
+    duplicated, sentinel-masked) COO buffer in a SINGLE canonicalization.
+
+    This is the fused spill cascade's data plane: instead of one sort per
+    hierarchy level, every spilling layer's buffer and the incoming block
+    are combined in one pass.  With ``use_kernel`` the Pallas multi-way
+    merge is used below its capacity ceiling (the sorted runs are bitonic-
+    merged, not re-sorted); otherwise one XLA co-sort does everything.
+    """
+    segments = tuple(segments)
+    if use_kernel:
+        from repro.kernels.hier_merge import ops as hm_ops
+
+        run_caps = tuple(s.capacity for s in segments)
+        if hm_ops.multi_padded_capacity(hi.shape[-1], run_caps) \
+                <= hm_ops.MAX_KERNEL_CAPACITY:
+            run_arrays = []
+            for s in segments:
+                run_arrays += [s.hi, s.lo, s.val.astype(val.dtype)]
+            o_hi, o_lo, o_val, nnz, ovf = hm_ops.merge_multi(
+                hi, lo, val, *run_arrays,
+                out_capacity=out_capacity, sr_name=sr.name)
+            return AssocSegment(o_hi, o_lo, o_val, nnz), ovf
+    cat_hi = jnp.concatenate([hi] + [s.hi for s in segments])
+    cat_lo = jnp.concatenate([lo] + [s.lo for s in segments])
+    cat_val = jnp.concatenate([val] + [s.val.astype(val.dtype)
+                                       for s in segments])
+    return _canonicalize(cat_hi, cat_lo, cat_val, out_capacity, sr)
 
 
 def clear(seg: AssocSegment, sr: Semiring = sr_mod.PLUS_TIMES) -> AssocSegment:

@@ -21,8 +21,9 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
+from repro.compat import NamedSharding, P, shard_map
 from repro.core import hier, stream
 from repro.core import semiring as sr_mod
 from repro.core.hier import HierAssoc
@@ -60,20 +61,26 @@ def create_instances(n_instances: int, cuts: Tuple[int, ...], block_size: int,
 
 def sharded_ingest_fn(mesh: Mesh, data_axes: Tuple[str, ...],
                       sr: Semiring = sr_mod.PLUS_TIMES,
-                      lazy_l0: bool = False):
+                      lazy_l0: bool = False,
+                      use_kernel: bool = False,
+                      fused: bool = False,
+                      chunk: int = 1):
     """Build the distributed ingest step.
 
     States and streams are sharded over ``data_axes`` on their instance
     (leading) axis; each device scans its own instances — no collectives on
-    the update path, exactly the paper's share-nothing design.
+    the update path, exactly the paper's share-nothing design.  ``fused``
+    selects the single-sort fused spill cascade per instance (hier.py);
+    ``chunk`` pre-combines that many stream blocks per hierarchy update.
     """
     spec = P(data_axes)
 
-    @partial(jax.shard_map, mesh=mesh, in_specs=(spec, spec, spec, spec),
+    @partial(shard_map, mesh=mesh, in_specs=(spec, spec, spec, spec),
              out_specs=(spec, spec), check_vma=False)
     def dist_ingest(states, rows, cols, vals):
         return stream.ingest_instances(states, rows, cols, vals, sr=sr,
-                                       lazy_l0=lazy_l0)
+                                       use_kernel=use_kernel, lazy_l0=lazy_l0,
+                                       fused=fused, chunk=chunk)
 
     return jax.jit(dist_ingest, donate_argnums=(0,))
 
@@ -90,7 +97,7 @@ def global_degree_histogram_fn(mesh: Mesh, data_axes: Tuple[str, ...],
 
     spec = P(data_axes)
 
-    @partial(jax.shard_map, mesh=mesh, in_specs=(spec,), out_specs=P(),
+    @partial(shard_map, mesh=mesh, in_specs=(spec,), out_specs=P(),
              check_vma=False)
     def histogram(states):
         def one_instance(h):
@@ -115,7 +122,7 @@ def aggregate_update_counts_fn(mesh: Mesh, data_axes: Tuple[str, ...]):
     """Total updates ingested across the fleet (throughput accounting)."""
     spec = P(data_axes)
 
-    @partial(jax.shard_map, mesh=mesh, in_specs=(spec,), out_specs=P(),
+    @partial(shard_map, mesh=mesh, in_specs=(spec,), out_specs=P(),
              check_vma=False)
     def count(states):
         local = jnp.sum(states.n_updates)

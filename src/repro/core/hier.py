@@ -87,21 +87,32 @@ def _merge(a, b, cap, sr, use_kernel):
 
 
 def _spill(src: AssocSegment, dst: AssocSegment, sr: Semiring,
-           use_kernel: bool = False
+           use_kernel: bool = False, src_canonical: bool = True
            ) -> Tuple[AssocSegment, AssocSegment, Array]:
-    merged, ovf = _merge(dst, src, dst.capacity, sr, use_kernel)
+    if src_canonical:
+        merged, ovf = _merge(dst, src, dst.capacity, sr, use_kernel)
+    else:
+        # src is a lazy append buffer (unsorted, duplicated): the pairwise
+        # bitonic kernel requires canonical inputs, so route through the
+        # multi-way merge, which sorts the raw side first.
+        merged, ovf = assoc.merge_many((dst,), src.hi, src.lo, src.val,
+                                       out_capacity=dst.capacity, sr=sr,
+                                       use_kernel=use_kernel)
     return assoc.clear(src, sr), merged, ovf
 
 
-def _cascade(h: HierAssoc, sr: Semiring, use_kernel: bool = False) -> HierAssoc:
+def _cascade(h: HierAssoc, sr: Semiring, use_kernel: bool = False,
+             lazy_l0: bool = False) -> HierAssoc:
     layers = list(h.layers)
     spills = h.spills
     overflow = h.overflow
     for i in range(len(layers) - 1):
         src, dst = layers[i], layers[i + 1]
+        src_canonical = not (lazy_l0 and i == 0)
 
-        def do_spill(src=src, dst=dst):
-            new_src, new_dst, ovf = _spill(src, dst, sr, use_kernel)
+        def do_spill(src=src, dst=dst, src_canonical=src_canonical):
+            new_src, new_dst, ovf = _spill(src, dst, sr, use_kernel,
+                                           src_canonical)
             return new_src, new_dst, jnp.int32(1), ovf
 
         def no_spill(src=src, dst=dst):
@@ -120,11 +131,129 @@ def _cascade(h: HierAssoc, sr: Semiring, use_kernel: bool = False) -> HierAssoc:
         h, layers=tuple(layers), spills=spills, overflow=overflow)
 
 
+def _lazy_append(l0: AssocSegment, hi: Array, lo: Array, val: Array
+                 ) -> Tuple[AssocSegment, Array]:
+    """Append a block into the layer-0 buffer (LSM memtable discipline).
+
+    The clamp keeps the write in-bounds, but when nnz > capacity - block it
+    lands the block on top of live buffer slots [start, nnz).  Those entries
+    are destroyed, not merged — the returned ``clobbered`` count (an upper
+    bound on unique keys lost, consistent with slot-counting nnz) must be
+    added to overflow.  Cascade planning keeps this at zero in normal
+    operation.
+    """
+    b = hi.shape[-1]
+    start = jnp.minimum(l0.nnz, l0.capacity - b)
+    clobbered = jnp.maximum(l0.nnz - start, 0).astype(jnp.int32)
+    layer0 = AssocSegment(
+        hi=jax.lax.dynamic_update_slice(l0.hi, hi, (start,)),
+        lo=jax.lax.dynamic_update_slice(l0.lo, lo, (start,)),
+        val=jax.lax.dynamic_update_slice(
+            l0.val, val.astype(l0.val.dtype), (start,)),
+        nnz=start + jnp.int32(b))
+    return layer0, clobbered
+
+
+def _plan_spill_depth(h: HierAssoc, block_slots: int) -> Array:
+    """Pure scalar arithmetic on per-layer nnz counters: the fused cascade's
+    destination layer for an incoming block of ``block_slots`` entries.
+
+    Layer 0 spills iff its slots plus the block exceed c_0; layer i spills
+    iff every layer above it spills AND the accumulated slot count exceeds
+    c_i.  ``nnz`` is a slot count (an upper bound on unique keys), so the
+    plan never under-provisions: the chosen destination d satisfies
+    occupancy_d <= c_d <= C_d for d < L-1, making overflow possible only at
+    the last layer.  No array data is touched — this is the "plan before
+    moving" half of the single-sort cascade.
+    """
+    occupancy = jnp.int32(block_slots)
+    depth = jnp.int32(0)
+    chain = jnp.bool_(True)
+    for i in range(h.num_layers - 1):
+        occupancy = occupancy + h.layers[i].nnz
+        spill_i = chain & (occupancy > h.cuts[i])
+        depth = jnp.where(spill_i, jnp.int32(i + 1), depth)
+        chain = spill_i
+    return depth
+
+
+def _update_fused(h: HierAssoc, rows: Array, cols: Array, vals: Array,
+                  mask: Array | None, sr: Semiring, use_kernel: bool,
+                  lazy_l0: bool) -> HierAssoc:
+    """Single-sort fused spill cascade (tentpole path).
+
+    The layered path pays up to L+1 canonicalization sorts per block (block
+    dedup, layer-0 merge, one per cascading spill) and re-sorts already-
+    sorted layer buffers at every level.  Here the spill chain is *planned*
+    first (scalar arithmetic on nnz counters and cuts), then a single
+    ``lax.switch`` branch concatenates the raw COO block with every spilling
+    layer's buffer and runs ONE canonicalization into the deepest
+    destination layer.  With ``lazy_l0`` the no-spill branch degenerates to
+    a pure append — zero sorts for the common case, the LSM memtable
+    discipline fused with the paper's hierarchy.
+    """
+    B = rows.shape[-1]
+    vdtype = h.layers[0].dtype
+    rows, cols, vals = assoc.mask_coo(rows, cols, vals.astype(vdtype), mask,
+                                      sr)
+    depth = _plan_spill_depth(h, B)
+    caps = h.capacities
+    L = h.num_layers
+
+    # A block larger than c_0 always spills (occupancy >= B > c_0), so the
+    # append fast path is unreachable — and its fixed-size slice would not
+    # even fit layer 0.  Trace the merge path for branch 0 in that case.
+    lazy_append = lazy_l0 and B <= h.cuts[0]
+
+    def make_branch(d: int):
+        def run(_):
+            if d == 0 and lazy_append:
+                # No spill planned: append the raw block into the layer-0
+                # buffer.  The plan guarantees nnz + B <= c_0 < C_0, so the
+                # clobber count is zero in normal operation.
+                layer0, clobbered = _lazy_append(h.layers[0], rows, cols,
+                                                 vals)
+                return (layer0,) + h.layers[1:], h.spills, clobbered
+            if lazy_l0 and d > 0:
+                # Layer 0 is an append buffer (unsorted); fold it into the
+                # raw side so the kernel path sees true sorted runs only.
+                l0 = h.layers[0]
+                raw = (jnp.concatenate([rows, l0.hi]),
+                       jnp.concatenate([cols, l0.lo]),
+                       jnp.concatenate([vals, l0.val]))
+                runs = h.layers[1:d + 1]
+            else:
+                raw = (rows, cols, vals)
+                runs = h.layers[:d + 1]
+            seg, ovf = assoc.merge_many(runs, *raw, out_capacity=caps[d],
+                                        sr=sr, use_kernel=use_kernel)
+            new_layers = tuple(assoc.empty(caps[i], vdtype, sr)
+                               for i in range(d)) + (seg,) + h.layers[d + 1:]
+            spills = h.spills.at[:d].add(1) if d else h.spills
+            return new_layers, spills, ovf
+        return run
+
+    new_layers, spills, ovf = jax.lax.switch(
+        depth, [make_branch(d) for d in range(L)], None)
+    # Pressure flag for the spill-less last layer (same as the layered path).
+    spills = spills.at[-1].add(
+        (new_layers[-1].nnz > h.cuts[-1]).astype(jnp.int32))
+    n_new = B if mask is None else jnp.sum(mask)
+    return dataclasses.replace(
+        h,
+        layers=new_layers,
+        spills=spills,
+        overflow=h.overflow + ovf,
+        n_updates=h.n_updates + jnp.int32(n_new),
+    )
+
+
 def update(h: HierAssoc, rows: Array, cols: Array, vals: Array,
            mask: Array | None = None,
            sr: Semiring = sr_mod.PLUS_TIMES,
            use_kernel: bool = False,
-           lazy_l0: bool = False) -> HierAssoc:
+           lazy_l0: bool = False,
+           fused: bool = False) -> HierAssoc:
     """Block-update: semiring-add a COO block into the hierarchy (Fig 2).
 
     ``lazy_l0=True`` (beyond-paper optimization, EXPERIMENTS.md §Perf):
@@ -136,22 +265,21 @@ def update(h: HierAssoc, rows: Array, cols: Array, vals: Array,
     layer 0 then counts occupied SLOTS (an upper bound on unique keys),
     which is exactly what the cut threshold compares against.  Restricted
     to plus.times: duplicate keys in the buffer must sum-combine.
+
+    ``fused=True`` routes through the single-sort fused spill cascade
+    (``_update_fused``): one canonicalization per block instead of up to
+    L+1, query-equivalent to this layered reference path.
     """
     if lazy_l0 and sr.name != "plus.times":
         raise ValueError("lazy_l0 requires the plus.times semiring")
+    if fused:
+        return _update_fused(h, rows, cols, vals, mask, sr, use_kernel,
+                             lazy_l0)
     merged, ovf0 = assoc.from_coo(rows, cols, vals, rows.shape[-1], sr,
                                   mask=mask)
     if lazy_l0:
-        l0 = h.layers[0]
-        b = merged.capacity
-        start = jnp.minimum(l0.nnz, l0.capacity - b)
-        layer0 = assoc.AssocSegment(
-            hi=jax.lax.dynamic_update_slice(l0.hi, merged.hi, (start,)),
-            lo=jax.lax.dynamic_update_slice(l0.lo, merged.lo, (start,)),
-            val=jax.lax.dynamic_update_slice(
-                l0.val, merged.val.astype(l0.val.dtype), (start,)),
-            nnz=start + jnp.int32(b))
-        ovf1 = jnp.zeros((), jnp.int32)
+        layer0, ovf1 = _lazy_append(h.layers[0], merged.hi, merged.lo,
+                                    merged.val)
     else:
         layer0, ovf1 = _merge(h.layers[0], merged, h.layers[0].capacity, sr,
                               use_kernel)
@@ -162,16 +290,38 @@ def update(h: HierAssoc, rows: Array, cols: Array, vals: Array,
         overflow=h.overflow + ovf0 + ovf1,
         n_updates=h.n_updates + jnp.int32(n_new),
     )
-    return _cascade(h, sr, use_kernel)
+    return _cascade(h, sr, use_kernel, lazy_l0)
 
 
 def query_all(h: HierAssoc, sr: Semiring = sr_mod.PLUS_TIMES,
-              use_kernel: bool = False) -> AssocSegment:
-    """Sum all layers into one canonical segment (paper: query path)."""
-    acc = h.layers[-1]
+              use_kernel: bool = False,
+              lazy_l0: bool = False) -> AssocSegment:
+    """Sum all layers into one canonical segment (paper: query path).
+
+    Pass ``lazy_l0=True`` when the hierarchy is operated with lazy layer-0
+    appends: the buffer is then merged as raw (unsorted) data, which the
+    kernel path must know about.
+    """
     cap = sum(h.capacities)
-    for layer in reversed(h.layers[:-1]):
+    l0 = h.layers[0]
+    if h.num_layers == 1:
+        if lazy_l0:
+            # The append buffer is unsorted and duplicated; canonicalize it
+            # even with no other layer to merge against.
+            acc, _ = assoc.merge_many((), l0.hi, l0.lo, l0.val,
+                                      out_capacity=cap, sr=sr,
+                                      use_kernel=use_kernel)
+            return acc
+        return l0
+    acc = h.layers[-1]
+    for layer in reversed(h.layers[1:-1]):
         acc, _ = _merge(acc, layer, cap, sr, use_kernel)
+    if lazy_l0:
+        acc, _ = assoc.merge_many((acc,), l0.hi, l0.lo, l0.val,
+                                  out_capacity=cap, sr=sr,
+                                  use_kernel=use_kernel)
+    else:
+        acc, _ = _merge(acc, l0, cap, sr, use_kernel)
     return acc
 
 
@@ -189,15 +339,19 @@ def total_nnz_upper_bound(h: HierAssoc) -> Array:
     return jnp.sum(h.nnz_per_layer())
 
 
-def flush(h: HierAssoc, sr: Semiring = sr_mod.PLUS_TIMES) -> HierAssoc:
+def flush(h: HierAssoc, sr: Semiring = sr_mod.PLUS_TIMES,
+          use_kernel: bool = False, lazy_l0: bool = False) -> HierAssoc:
     """Force-spill every layer downward (checkpoint/drain path)."""
     layers = list(h.layers)
     spills = h.spills
     overflow = h.overflow
     for i in range(len(layers) - 1):
-        new_src, new_dst, ovf = _spill(layers[i], layers[i + 1], sr)
+        moved = (layers[i].nnz > 0).astype(jnp.int32)
+        new_src, new_dst, ovf = _spill(layers[i], layers[i + 1], sr,
+                                       use_kernel,
+                                       src_canonical=not (lazy_l0 and i == 0))
         layers[i], layers[i + 1] = new_src, new_dst
-        spills = spills.at[i].add(1)
+        spills = spills.at[i].add(moved)
         overflow = overflow + ovf
     return dataclasses.replace(h, layers=tuple(layers), spills=spills,
                                overflow=overflow)

@@ -5,6 +5,12 @@ instance.  StreamEngine runs that as a single ``lax.scan`` over update blocks
 so the whole ingest compiles to one XLA program (no per-block dispatch
 overhead — the TPU analogue of the paper's in-process update loop).
 
+``chunk=T_inner`` pre-combines T_inner consecutive stream blocks into one
+larger block per hierarchy update, so their dedup/merge happens in a single
+sort — the same amortization as the paper's blocking of 100,000-entry sets,
+one level up.  ``fused=True`` routes each block through the single-sort
+fused spill cascade (core/hier.py) instead of the layered reference path.
+
 Instances: `ingest` is written for one hierarchy and one [T, B] block stream;
 `jax.vmap` maps it over an instances axis, `core.distributed` places instance
 groups on mesh devices.
@@ -28,18 +34,40 @@ def ingest(h: HierAssoc, rows: Array, cols: Array, vals: Array,
            sr: Semiring = sr_mod.PLUS_TIMES,
            use_kernel: bool = False,
            lazy_l0: bool = False,
+           fused: bool = False,
+           chunk: int = 1,
            ) -> Tuple[HierAssoc, dict]:
     """Scan a [T, B] stream of update blocks into the hierarchy.
+
+    ``chunk > 1`` reshapes the stream to [T/chunk, chunk*B]: chunk blocks
+    enter the hierarchy as one update, pre-combined by the update's single
+    canonicalization sort.  The layered path sizes layer 0 for the creation
+    block size, so chunking beyond it requires ``fused=True`` (the fused
+    planner provisions any incoming block against the whole cut stack).
 
     Returns the final state plus per-step telemetry (layer-0 nnz and
     cumulative spill counts) used by the update-rate benchmarks to verify
     the paper's claim that most updates never touch slow memory.
     """
+    if chunk > 1:
+        T, B = rows.shape[-2], rows.shape[-1]
+        if T % chunk:
+            raise ValueError(f"stream length {T} not divisible by chunk "
+                             f"{chunk}")
+        if not fused and chunk * B > h.layers[0].capacity - h.cuts[0]:
+            raise ValueError(
+                f"chunk*B = {chunk * B} exceeds layer-0 headroom "
+                f"{h.layers[0].capacity - h.cuts[0]}; use fused=True or a "
+                f"hierarchy created with block_size >= {chunk * B}")
+        shape = rows.shape[:-2] + (T // chunk, chunk * B)
+        rows = rows.reshape(shape)
+        cols = cols.reshape(shape)
+        vals = vals.reshape(shape)
 
     def step(state: HierAssoc, block):
         r, c, v = block
         new_state = hier.update(state, r, c, v, sr=sr, use_kernel=use_kernel,
-                                lazy_l0=lazy_l0)
+                                lazy_l0=lazy_l0, fused=fused)
         telemetry = dict(
             nnz0=new_state.layers[0].nnz,
             spills=new_state.spills,
@@ -52,20 +80,48 @@ def ingest(h: HierAssoc, rows: Array, cols: Array, vals: Array,
 
 
 def ingest_jit(cuts: Tuple[int, ...], block_size: int, dtype=jnp.float32,
-               sr: Semiring = sr_mod.PLUS_TIMES):
-    """Build a jitted (state, stream) -> (state, telemetry) ingest fn."""
+               sr: Semiring = sr_mod.PLUS_TIMES, *,
+               use_kernel: bool = False,
+               lazy_l0: bool = False,
+               fused: bool = False,
+               chunk: int = 1):
+    """Build a jitted (state, stream) -> (state, telemetry) ingest fn.
+
+    ``cuts``/``block_size``/``dtype`` pin the hierarchy geometry the
+    returned function is specialized to; mismatched states or streams fail
+    fast at trace time instead of silently ingesting with the wrong
+    configuration.
+    """
+    cuts = tuple(cuts)
+    caps = hier.layer_capacities(cuts, block_size)
+    dtype = jnp.dtype(dtype)
 
     def run(h, rows, cols, vals):
-        return ingest(h, rows, cols, vals, sr=sr)
+        if tuple(h.cuts) != cuts:
+            raise ValueError(f"state cuts {h.cuts} != configured {cuts}")
+        if h.capacities != caps:
+            raise ValueError(f"state capacities {h.capacities} != {caps} "
+                             f"(block_size {block_size})")
+        if h.layers[0].dtype != dtype:
+            raise ValueError(f"state dtype {h.layers[0].dtype} != {dtype}")
+        if rows.shape[-1] != block_size:
+            raise ValueError(f"stream block {rows.shape[-1]} != configured "
+                             f"block_size {block_size}")
+        return ingest(h, rows, cols, vals, sr=sr, use_kernel=use_kernel,
+                      lazy_l0=lazy_l0, fused=fused, chunk=chunk)
 
     return jax.jit(run)
 
 
 def ingest_instances(states: HierAssoc, rows: Array, cols: Array, vals: Array,
                      sr: Semiring = sr_mod.PLUS_TIMES,
-                     lazy_l0: bool = False):
+                     use_kernel: bool = False,
+                     lazy_l0: bool = False,
+                     fused: bool = False,
+                     chunk: int = 1):
     """vmapped ingest: states is an instance-batched HierAssoc pytree and the
     stream arrays are [I, T, B]."""
     return jax.vmap(
-        lambda h, r, c, v: ingest(h, r, c, v, sr=sr, lazy_l0=lazy_l0))(
+        lambda h, r, c, v: ingest(h, r, c, v, sr=sr, use_kernel=use_kernel,
+                                  lazy_l0=lazy_l0, fused=fused, chunk=chunk))(
         states, rows, cols, vals)

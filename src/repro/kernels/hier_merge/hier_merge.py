@@ -122,20 +122,11 @@ def _shift_left(x, d: int, fill):
     return jnp.concatenate([x[d:], pad])
 
 
-def _merge_kernel(hi_a_ref, lo_a_ref, val_a_ref,
-                  hi_b_ref, lo_b_ref, val_b_ref,
-                  hi_out_ref, lo_out_ref, val_out_ref, nnz_ref,
-                  *, sr_name: str):
+def _combine_dedup_compact(hi, lo, val, sr_name: str):
+    """Phases B-D on one sorted sequence: segmented combine, blank non-last
+    duplicates, bitonic compaction back to canonical form."""
     combine = _COMBINE[sr_name]
-    vdtype = val_a_ref.dtype
-    zero = _zero_for(sr_name, np.dtype(vdtype))
-
-    # --- phase A: bitonic merge of A ++ reverse(B) --------------------------
-    hi = jnp.concatenate([hi_a_ref[...], jnp.flip(hi_b_ref[...])])
-    lo = jnp.concatenate([lo_a_ref[...], jnp.flip(lo_b_ref[...])])
-    val = jnp.concatenate([val_a_ref[...], jnp.flip(val_b_ref[...])])
-    hi, lo, val = _bitonic_merge(hi, lo, val)
-
+    zero = _zero_for(sr_name, np.dtype(val.dtype))
     n = hi.shape[0]
 
     # --- phase B: segmented combine; run-last ends with the run total ------
@@ -157,6 +148,60 @@ def _merge_kernel(hi_a_ref, lo_a_ref, val_a_ref,
 
     # canonical zero for padding (semiring zero, incl. +-inf variants)
     val = jnp.where(hi != SENTINEL, val, zero)
+    return hi, lo, val
+
+
+def _merge_kernel(hi_a_ref, lo_a_ref, val_a_ref,
+                  hi_b_ref, lo_b_ref, val_b_ref,
+                  hi_out_ref, lo_out_ref, val_out_ref, nnz_ref,
+                  *, sr_name: str):
+    # --- phase A: bitonic merge of A ++ reverse(B) --------------------------
+    hi = jnp.concatenate([hi_a_ref[...], jnp.flip(hi_b_ref[...])])
+    lo = jnp.concatenate([lo_a_ref[...], jnp.flip(lo_b_ref[...])])
+    val = jnp.concatenate([val_a_ref[...], jnp.flip(val_b_ref[...])])
+    hi, lo, val = _bitonic_merge(hi, lo, val)
+
+    hi, lo, val = _combine_dedup_compact(hi, lo, val, sr_name)
+
+    hi_out_ref[...] = hi
+    lo_out_ref[...] = lo
+    val_out_ref[...] = val
+    nnz_ref[0] = jnp.sum((hi != SENTINEL).astype(jnp.int32))
+
+
+def _merge_multi_kernel(*refs, sr_name: str, k: int):
+    """Multi-way merge: one UNSORTED block + k sorted canonical runs.
+
+    The block is bitonic-sorted once, then each run is folded in with a
+    bitonic *merge* (log n stages — the runs' existing order is reused, not
+    re-sorted), and the combine/dedup/compact phases execute exactly once at
+    the end.  This is the kernel half of the fused spill cascade: total
+    stage count ~ sort(B) + sum_i merge(n_i) + sort(n) instead of one
+    monolithic sort per hierarchy level.
+
+    ``refs`` layout: 3 block refs, then 3 refs per run, then the 4 outputs.
+    Cumulative sizes (block, block+run_1, ...) are pre-padded to powers of
+    two by ops.py, so every intermediate sequence is a valid bitonic input.
+    """
+    ins, outs = refs[:3 * (k + 1)], refs[3 * (k + 1):]
+    hi_out_ref, lo_out_ref, val_out_ref, nnz_ref = outs
+
+    hi = ins[0][...]
+    lo = ins[1][...]
+    val = ins[2][...]
+    hi, lo, val = _bitonic_sort(hi, lo, val)
+
+    for r in range(k):
+        rhi, rlo, rval = (ins[3 * (r + 1)][...], ins[3 * (r + 1) + 1][...],
+                          ins[3 * (r + 1) + 2][...])
+        # acc (ascending) ++ reversed run (descending) is bitonic for any
+        # split point; the pre-padding makes the total a power of two.
+        hi = jnp.concatenate([hi, jnp.flip(rhi)])
+        lo = jnp.concatenate([lo, jnp.flip(rlo)])
+        val = jnp.concatenate([val, jnp.flip(rval)])
+        hi, lo, val = _bitonic_merge(hi, lo, val)
+
+    hi, lo, val = _combine_dedup_compact(hi, lo, val, sr_name)
 
     hi_out_ref[...] = hi
     lo_out_ref[...] = lo
@@ -186,3 +231,40 @@ def merge_pallas(hi_a, lo_a, val_a, hi_b, lo_b, val_b, *,
                    pl.BlockSpec(memory_space=pltpu.SMEM)),
         interpret=interpret,
     )(hi_a, lo_a, val_a, hi_b, lo_b, val_b)
+
+
+def merge_multi_pallas(block, runs, *, sr_name: str = "plus.times",
+                       interpret: bool = True):
+    """Raw pallas_call wrapper for the multi-way merge.
+
+    ``block`` is an (hi, lo, val) triple of an UNSORTED power-of-two-sized
+    buffer; ``runs`` is a sequence of canonical (hi, lo, val) triples padded
+    (ops.py) so every cumulative size block+run_1+..+run_i is a power of
+    two.  Returns (hi, lo, val, nnz[1]) at the final cumulative size.
+    """
+    k = len(runs)
+    size = block[0].shape[0]
+    assert size & (size - 1) == 0, f"block size must be a power of 2: {size}"
+    for r in runs:
+        size += r[0].shape[0]
+        assert size & (size - 1) == 0, \
+            f"cumulative size must stay a power of 2, got {size}"
+    kernel = functools.partial(_merge_multi_kernel, sr_name=sr_name, k=k)
+    out_shapes = (
+        jax.ShapeDtypeStruct((size,), jnp.int32),
+        jax.ShapeDtypeStruct((size,), jnp.int32),
+        jax.ShapeDtypeStruct((size,), block[2].dtype),
+        jax.ShapeDtypeStruct((1,), jnp.int32),
+    )
+    vmem = pl.BlockSpec(memory_space=pltpu.VMEM)
+    operands = list(block)
+    for r in runs:
+        operands += list(r)
+    return pl.pallas_call(
+        kernel,
+        out_shape=out_shapes,
+        in_specs=[vmem] * (3 * (k + 1)),
+        out_specs=(vmem, vmem, vmem,
+                   pl.BlockSpec(memory_space=pltpu.SMEM)),
+        interpret=interpret,
+    )(*operands)

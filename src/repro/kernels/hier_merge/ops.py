@@ -20,13 +20,25 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.hier_merge import ref
-from repro.kernels.hier_merge.hier_merge import SENTINEL, merge_pallas
+from repro.kernels.hier_merge.hier_merge import (SENTINEL, merge_multi_pallas,
+                                                 merge_pallas)
 
 MAX_KERNEL_CAPACITY = 1 << 16
 
 
 def _next_pow2(n: int) -> int:
     return 1 << (n - 1).bit_length()
+
+
+def multi_padded_capacity(block_cap: int, run_caps) -> int:
+    """Final in-kernel sequence size for a multi-way merge: the block padded
+    to a power of two, then each run padded so every cumulative size stays a
+    power of two (bitonic-stage requirement).  Compare against
+    MAX_KERNEL_CAPACITY before choosing the kernel path."""
+    cum = _next_pow2(max(block_cap, 1))
+    for c in run_caps:
+        cum = _next_pow2(cum + c)
+    return cum
 
 
 def _pad_canonical(hi, lo, val, cap: int, zero):
@@ -36,6 +48,18 @@ def _pad_canonical(hi, lo, val, cap: int, zero):
     return (jnp.concatenate([hi, jnp.full((pad,), SENTINEL, jnp.int32)]),
             jnp.concatenate([lo, jnp.full((pad,), SENTINEL, jnp.int32)]),
             jnp.concatenate([val, jnp.full((pad,), zero, val.dtype)]))
+
+
+def _finalize(hi, lo, val, nnz, out_capacity: int, zero):
+    """Pad or truncate a canonical merge result to ``out_capacity`` and
+    account truncated unique entries as overflow."""
+    if out_capacity >= hi.shape[0]:
+        hi, lo, val = _pad_canonical(hi, lo, val, out_capacity, zero)
+        overflow = jnp.zeros((), jnp.int32)
+    else:
+        hi, lo, val = hi[:out_capacity], lo[:out_capacity], val[:out_capacity]
+        overflow = jnp.maximum(nnz - out_capacity, 0)
+    return hi, lo, val, jnp.minimum(nnz, out_capacity), overflow
 
 
 @functools.partial(jax.jit, static_argnames=("out_capacity", "sr_name",
@@ -61,12 +85,46 @@ def merge(hi_a, lo_a, val_a, hi_b, lo_b, val_b, *, out_capacity: int,
     else:
         hi, lo, val, nnz = ref.merge_ref(hi_a, lo_a, val_a, hi_b, lo_b, val_b,
                                          sr_name=sr_name)
-    nnz = nnz[0]
+    return _finalize(hi, lo, val, nnz[0], out_capacity, zero)
 
-    if out_capacity >= hi.shape[0]:
-        hi, lo, val = _pad_canonical(hi, lo, val, out_capacity, zero)
-        overflow = jnp.zeros((), jnp.int32)
+
+@functools.partial(jax.jit, static_argnames=("out_capacity", "sr_name",
+                                             "use_kernel", "interpret"))
+def merge_multi(block_hi, block_lo, block_val, *run_arrays,
+                out_capacity: int, sr_name: str = "plus.times",
+                use_kernel: bool = True, interpret: bool | None = None):
+    """Multi-way merge: one unsorted COO buffer + k canonical sorted runs
+    (passed flattened as hi_1, lo_1, val_1, hi_2, ...) into a canonical
+    segment of ``out_capacity``; returns (hi, lo, val, nnz, overflow).
+
+    This is the fused spill cascade's kernel entry point: below the VMEM
+    ceiling the whole chain runs as ONE Pallas dispatch whose sorted runs
+    are bitonic-merged rather than re-sorted; above it, one XLA lexsort
+    canonicalizes everything."""
+    assert len(run_arrays) % 3 == 0, "runs must be (hi, lo, val) triples"
+    runs = [tuple(run_arrays[i:i + 3]) for i in range(0, len(run_arrays), 3)]
+    zero = ref._zero_for(sr_name, np.dtype(block_val.dtype))
+    padded = multi_padded_capacity(block_hi.shape[0],
+                                   [r[0].shape[0] for r in runs])
+
+    if use_kernel and padded <= MAX_KERNEL_CAPACITY:
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        cum = _next_pow2(max(block_hi.shape[0], 1))
+        # SENTINEL padding is canonical: sorted runs stay sorted, and the
+        # unsorted block's sentinels are just more keys for the first sort.
+        block = _pad_canonical(block_hi, block_lo, block_val, cum, zero)
+        padded_runs = []
+        for rhi, rlo, rval in runs:
+            nxt = _next_pow2(cum + rhi.shape[0])
+            padded_runs.append(
+                _pad_canonical(rhi, rlo, rval, nxt - cum, zero))
+            cum = nxt
+        hi, lo, val, nnz = merge_multi_pallas(
+            block, padded_runs, sr_name=sr_name, interpret=interpret)
     else:
-        hi, lo, val = hi[:out_capacity], lo[:out_capacity], val[:out_capacity]
-        overflow = jnp.maximum(nnz - out_capacity, 0)
-    return hi, lo, val, jnp.minimum(nnz, out_capacity), overflow
+        hi, lo, val, nnz = ref.merge_multi_ref(
+            [block_hi] + [r[0] for r in runs],
+            [block_lo] + [r[1] for r in runs],
+            [block_val] + [r[2] for r in runs], sr_name=sr_name)
+    return _finalize(hi, lo, val, nnz[0], out_capacity, zero)

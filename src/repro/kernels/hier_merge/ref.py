@@ -32,9 +32,17 @@ def _zero_for(sr_name: str, dtype) -> np.ndarray:
 def merge_ref(hi_a, lo_a, val_a, hi_b, lo_b, val_b, *,
               sr_name: str = "plus.times"):
     """Merge two canonical segments; returns (hi, lo, val, nnz[1])."""
-    hi = jnp.concatenate([hi_a, hi_b])
-    lo = jnp.concatenate([lo_a, lo_b])
-    val = jnp.concatenate([val_a, val_b])
+    return merge_multi_ref([hi_a, hi_b], [lo_a, lo_b], [val_a, val_b],
+                           sr_name=sr_name)
+
+
+def merge_multi_ref(his, los, vals, *, sr_name: str = "plus.times"):
+    """Merge any number of (not necessarily sorted) buffers; the lexsort
+    does not care about pre-order, so this also oracles the multi-way
+    kernel's 'k sorted runs + one unsorted block' contract."""
+    hi = jnp.concatenate(list(his))
+    lo = jnp.concatenate(list(los))
+    val = jnp.concatenate(list(vals))
     n = hi.shape[0]
 
     order = jnp.lexsort((lo, hi))

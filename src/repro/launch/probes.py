@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs import D4M_SHAPES, LM_SHAPES, get_config
 from repro.distribution.sharding import (lm_param_specs, make_policy,
                                          to_shardings, use_policy)
@@ -214,7 +215,7 @@ def d4m_corrected(arch: str, shape: str, mesh: Mesh,
                 return h
             return jax.vmap(one)(states, rows, cols, vals)
 
-        f = jax.jit(jax.shard_map(
+        f = jax.jit(shard_map(
             unrolled, mesh=mesh, in_specs=(spec,) * 4, out_specs=spec,
             check_vma=False))
         states_abs = jax.eval_shape(

@@ -1,0 +1,211 @@
+"""Equivalence tests: fused single-sort cascade vs layered reference path.
+
+The fused path (core/hier.py::_update_fused) plans the spill chain with
+scalar arithmetic and runs one canonicalization per block; the layered path
+is the per-layer reference oracle.  Both must expose identical associative-
+array CONTENTS and overflow accounting; per-layer nnz placement may differ
+(the fused plan counts slots, an upper bound on unique keys) but must stay
+consistent with the planner's invariants.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import assoc, hier, semiring, stream
+
+
+def _stream(seed, steps, block, nkeys):
+    rng = np.random.default_rng(seed)
+    R = jnp.asarray(rng.integers(0, nkeys, (steps, block)), jnp.int32)
+    C = jnp.asarray(rng.integers(0, nkeys, (steps, block)), jnp.int32)
+    V = jnp.asarray(rng.normal(size=(steps, block)), jnp.float32)
+    return R, C, V
+
+
+def _dense(h, n, sr=semiring.PLUS_TIMES):
+    return np.asarray(assoc.to_dense(hier.query_all(h, sr), n, n, sr))
+
+
+def _ingest_pair(cuts, block, R, C, V, sr=semiring.PLUS_TIMES,
+                 use_kernel=False, lazy_l0=False, chunk=1):
+    h0 = hier.create(cuts, block, sr=sr)
+    fused, _ = stream.ingest(h0, R, C, V, sr=sr, use_kernel=use_kernel,
+                             lazy_l0=lazy_l0, fused=True, chunk=chunk)
+    layered, _ = stream.ingest(h0, R, C, V, sr=sr, use_kernel=use_kernel,
+                               lazy_l0=lazy_l0, fused=False)
+    return fused, layered
+
+
+def test_fused_equals_layered_contents_and_overflow():
+    R, C, V = _stream(0, steps=50, block=8, nkeys=30)
+    fused, layered = _ingest_pair((16, 64, 512), 8, R, C, V)
+    np.testing.assert_allclose(_dense(fused, 30), _dense(layered, 30),
+                               rtol=1e-4, atol=1e-5)
+    assert int(fused.overflow) == int(layered.overflow) == 0
+    assert int(fused.n_updates) == int(layered.n_updates) == 50 * 8
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+@pytest.mark.parametrize("lazy_l0", [False, True])
+def test_fused_modes_match_layered(use_kernel, lazy_l0):
+    R, C, V = _stream(1, steps=30, block=8, nkeys=25)
+    fused, layered = _ingest_pair((16, 64, 256), 8, R, C, V,
+                                  use_kernel=use_kernel, lazy_l0=lazy_l0)
+    np.testing.assert_allclose(_dense(fused, 25), _dense(layered, 25),
+                               rtol=1e-4, atol=1e-5)
+    assert int(fused.overflow) == int(layered.overflow) == 0
+
+
+@pytest.mark.parametrize("sr", [semiring.PLUS_TIMES, semiring.MAX_PLUS,
+                                semiring.MIN_PLUS, semiring.MAX_MIN],
+                         ids=lambda s: s.name)
+def test_fused_all_semirings(sr):
+    R, C, V = _stream(2, steps=20, block=8, nkeys=15)
+    fused, layered = _ingest_pair((8, 32, 128), 8, R, C, V, sr=sr)
+    np.testing.assert_allclose(_dense(fused, 15, sr), _dense(layered, 15, sr),
+                               rtol=1e-4, atol=1e-5)
+    assert int(fused.overflow) == int(layered.overflow) == 0
+
+
+def test_fused_chunked_matches_unchunked():
+    R, C, V = _stream(3, steps=32, block=8, nkeys=40)
+    h0 = hier.create((16, 64, 512), 8)
+    a, _ = stream.ingest(h0, R, C, V, fused=True, lazy_l0=True, chunk=4)
+    b, _ = stream.ingest(h0, R, C, V, fused=True, lazy_l0=True)
+    c, _ = stream.ingest(h0, R, C, V)
+    np.testing.assert_allclose(_dense(a, 40), _dense(c, 40),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(_dense(b, 40), _dense(c, 40),
+                               rtol=1e-4, atol=1e-5)
+    assert int(a.n_updates) == int(c.n_updates)
+
+
+def test_fused_spill_plan_consistent_nnz():
+    """After every fused update each non-last layer respects its cut, and
+    the planned destination matches where the data landed."""
+    R, C, V = _stream(4, steps=40, block=16, nkeys=3000)
+    cuts = (32, 128, 8192)
+    h = hier.create(cuts, block_size=16)
+
+    def step(state, blk):
+        planned = hier._plan_spill_depth(state, 16)
+        state = hier.update(state, *blk, fused=True)
+        return state, (planned, state.nnz_per_layer())
+
+    _, (depths, nnzs) = jax.lax.scan(step, h, (R, C, V))
+    nnzs = np.asarray(nnzs)
+    depths = np.asarray(depths)
+    assert np.all(nnzs[:, 0] <= cuts[0])
+    assert np.all(nnzs[:, 1] <= cuts[1])
+    # a planned spill to depth d empties layers above d
+    for t, d in enumerate(depths):
+        assert np.all(nnzs[t, :d] == 0), (t, d, nnzs[t])
+    assert depths.max() >= 1  # the stream actually exercised spills
+
+
+def test_fused_overflow_counts_drops():
+    R, C, V = _stream(5, steps=64, block=16, nkeys=10 ** 6)
+    h = hier.create((8, 16, 32), block_size=16)   # tiny last layer
+    hf, _ = stream.ingest(h, R, C, V, fused=True)
+    assert int(hf.overflow) > 0
+
+
+def test_lazy_l0_clobber_is_counted():
+    """Regression: appending past layer-0 capacity must surface in overflow
+    instead of silently destroying live entries."""
+    h = hier.create((4, 1024), block_size=4)
+    # bypass the cascade: force a layer 0 with nnz beyond capacity - block
+    l0 = h.layers[0]
+    full = dataclasses.replace(
+        l0,
+        hi=jnp.arange(l0.capacity, dtype=jnp.int32),
+        lo=jnp.arange(l0.capacity, dtype=jnp.int32),
+        val=jnp.ones((l0.capacity,), jnp.float32),
+        nnz=jnp.int32(l0.capacity))
+    h = dataclasses.replace(h, layers=(full,) + h.layers[1:])
+    h2 = hier.update(h, jnp.full((4,), 1, jnp.int32),
+                     jnp.full((4,), 2, jnp.int32), jnp.ones((4,)),
+                     lazy_l0=True)
+    assert int(h2.overflow) == 4  # the whole append landed on live slots
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    cuts=st.lists(st.integers(2, 6), min_size=1, max_size=3),
+    steps=st.integers(1, 12),
+    nkeys=st.integers(1, 40),
+    seed=st.integers(0, 2 ** 16),
+    lazy=st.sampled_from([False, True]),
+)
+def test_property_fused_equals_layered(cuts, steps, nkeys, seed, lazy):
+    """Arbitrary cut stacks and streams: fused == layered == dense."""
+    cuts = tuple(np.cumsum(np.asarray(cuts) * 8).tolist()) + (10 ** 5,)
+    block = 8
+    R, C, V = _stream(seed, steps, block, nkeys)
+    fused, layered = _ingest_pair(cuts, block, R, C, V, lazy_l0=lazy)
+    np.testing.assert_allclose(_dense(fused, nkeys), _dense(layered, nkeys),
+                               rtol=1e-4, atol=1e-5)
+    assert int(fused.overflow) == int(layered.overflow) == 0
+
+
+def test_ingest_jit_validates_geometry():
+    run = stream.ingest_jit((16, 64), block_size=8, fused=True)
+    h = hier.create((16, 64), block_size=8)
+    R, C, V = _stream(6, steps=4, block=8, nkeys=10)
+    out, _ = run(h, R, C, V)
+    assert int(out.n_updates) == 32
+    with pytest.raises(ValueError):
+        run(hier.create((16, 32), block_size=8), R, C, V)  # wrong cuts
+    bad_R, bad_C, bad_V = _stream(6, steps=4, block=4, nkeys=10)
+    with pytest.raises(ValueError):
+        run(h, bad_R, bad_C, bad_V)                        # wrong block
+
+
+def test_flush_spills_only_nonempty_layers():
+    h = hier.create((16, 64, 256), block_size=8)
+    flushed = hier.flush(h)           # nothing ingested: no spill events
+    assert np.asarray(flushed.spills).sum() == 0
+    R, C, V = _stream(7, steps=4, block=8, nkeys=10)
+    hf, _ = stream.ingest(h, R, C, V)
+    flushed = hier.flush(hf)
+    assert np.all(np.asarray(flushed.nnz_per_layer())[:-1] == 0)
+    assert np.asarray(flushed.spills).sum() > np.asarray(hf.spills).sum()
+
+
+def test_lazy_l0_kernel_spill_not_corrupted():
+    """Regression: the layered cascade used to feed layer 0's UNSORTED lazy
+    append buffer into the pairwise bitonic kernel (which assumes canonical
+    inputs), double-counting aligned duplicate keys.  Repeated-key blocks
+    make the alignment deterministic."""
+    R = jnp.tile(jnp.arange(8, dtype=jnp.int32)[None, :], (6, 1))
+    C = R
+    V = jnp.ones((6, 8), jnp.float32)
+    h = hier.create((16, 64, 256), block_size=8)
+    hk, _ = stream.ingest(h, R, C, V, lazy_l0=True, use_kernel=True)
+    merged = hier.query_all(hk, use_kernel=True, lazy_l0=True)
+    dense = np.asarray(assoc.to_dense(merged, 8, 8))
+    np.testing.assert_allclose(np.diag(dense), np.full(8, 6.0), rtol=1e-6)
+
+    flushed = hier.flush(hk, use_kernel=True, lazy_l0=True)
+    dense_f = np.asarray(assoc.to_dense(hier.query_all(flushed), 8, 8))
+    np.testing.assert_allclose(np.diag(dense_f), np.full(8, 6.0), rtol=1e-6)
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_query_all_single_layer_lazy_buffer(use_kernel):
+    """Regression: a one-layer hierarchy driven with lazy appends must still
+    canonicalize its buffer on query (it used to be returned verbatim)."""
+    h = hier.create((16,), block_size=4)
+    for _ in range(2):
+        h = hier.update(h, jnp.asarray([3, 3, 1, 1], jnp.int32),
+                        jnp.asarray([0, 0, 0, 0], jnp.int32),
+                        jnp.ones((4,)), lazy_l0=True, fused=True)
+    merged = hier.query_all(h, use_kernel=use_kernel, lazy_l0=True)
+    assert int(merged.nnz) == 2                      # unique keys, not slots
+    keys = np.asarray(merged.hi)[:2]
+    np.testing.assert_array_equal(keys, [1, 3])      # sorted canonical form
+    np.testing.assert_allclose(np.asarray(merged.val)[:2], [4.0, 4.0])

@@ -122,3 +122,56 @@ def test_kernel_inside_scan_jit():
         step, (base.hi, base.lo, base.val, base.nnz), (uh, ul, uv))
     total = float(jnp.sum(jnp.where(fh != assoc.SENTINEL, fv, 0.0)))
     assert total == 5 * 32  # all ones preserved through repeated merges
+
+
+def _raw_block(seed, n, nkeys, dtype=np.float32):
+    r = np.random.default_rng(seed)
+    return (jnp.asarray(r.integers(0, nkeys, n), jnp.int32),
+            jnp.asarray(r.integers(0, nkeys, n), jnp.int32),
+            jnp.asarray(r.normal(size=n).astype(dtype)))
+
+
+@pytest.mark.parametrize("run_caps", [(), (32,), (32, 128), (24, 100, 260)])
+@pytest.mark.parametrize("sr_name", list(SR))
+def test_multi_way_kernel_matches_ref(run_caps, sr_name):
+    """Fused-cascade entry point: k sorted runs + one unsorted block."""
+    bh, bl, bv = _raw_block(20, 48, 300)
+    runs = [make_seg(21 + i, cap // 2, cap, 300, np.float32, sr_name)
+            for i, cap in enumerate(run_caps)]
+    flat = []
+    for s in runs:
+        flat += [s.hi, s.lo, s.val]
+    out_cap = 48 + sum(run_caps)
+    got = ops.merge_multi(bh, bl, bv, *flat, out_capacity=out_cap,
+                          sr_name=sr_name)
+    want = ref.merge_multi_ref([bh] + [s.hi for s in runs],
+                               [bl] + [s.lo for s in runs],
+                               [bv] + [s.val for s in runs],
+                               sr_name=sr_name)
+    n = min(out_cap, want[0].shape[0])
+    np.testing.assert_array_equal(np.asarray(got[0])[:n],
+                                  np.asarray(want[0])[:n])
+    np.testing.assert_array_equal(np.asarray(got[1])[:n],
+                                  np.asarray(want[1])[:n])
+    gv, wv = np.asarray(got[2])[:n], np.asarray(want[2])[:n]
+    m = ~np.isinf(wv.astype(np.float64))
+    np.testing.assert_allclose(gv[m], wv[m], rtol=1e-4)
+    assert int(got[3]) == min(int(want[3][0]), out_cap)
+
+
+def test_multi_way_kernel_overflow_truncation():
+    bh, bl, bv = _raw_block(30, 64, 10**6)            # ~all unique
+    run = make_seg(31, 120, 128, 10**6, np.float32, "plus.times")
+    got = ops.merge_multi(bh, bl, bv, run.hi, run.lo, run.val,
+                          out_capacity=32, sr_name="plus.times")
+    assert int(got[3]) == 32
+    assert int(got[4]) > 0
+    keys = np.asarray(got[0]).astype(np.int64) * 2**31 + np.asarray(got[1])
+    assert np.all(np.diff(keys[:32]) > 0)
+
+
+def test_multi_padded_capacity_plans_pow2_chain():
+    assert ops.multi_padded_capacity(48, ()) == 64
+    assert ops.multi_padded_capacity(48, (32,)) == 128
+    cum = ops.multi_padded_capacity(48, (32, 128, 260))
+    assert cum & (cum - 1) == 0 and cum >= 48 + 32 + 128 + 260

@@ -55,7 +55,7 @@ def test_tiny_production_mesh_lowering():
     same cell-builder machinery the 512-chip dry-run uses."""
     out = run_script("""
 import jax, jax.numpy as jnp, numpy as np, dataclasses
-from jax.sharding import Mesh
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs import get_smoke_config
 from repro.models import transformer as tf
 from repro.optim.adamw import AdamWConfig, adamw_init
@@ -68,9 +68,9 @@ cfg = dataclasses.replace(get_smoke_config("mistral-nemo-12b"),
 policy = make_policy(mesh)
 params = jax.eval_shape(lambda k: tf.init(k, cfg), jax.random.PRNGKey(0))
 psh = to_shardings(lm_param_specs(params, cfg, policy), mesh)
-osh = dict(m=psh, v=psh, count=jax.NamedSharding(mesh, jax.P()))
-bsh = dict(tokens=jax.NamedSharding(mesh, jax.P(("pod", "data"))),
-           labels=jax.NamedSharding(mesh, jax.P(("pod", "data"))))
+osh = dict(m=psh, v=psh, count=NamedSharding(mesh, P()))
+bsh = dict(tokens=NamedSharding(mesh, P(("pod", "data"))),
+           labels=NamedSharding(mesh, P(("pod", "data"))))
 opt = jax.eval_shape(adamw_init, params)
 batch = dict(tokens=jax.ShapeDtypeStruct((8, 32), jnp.int32),
              labels=jax.ShapeDtypeStruct((8, 32), jnp.int32))
