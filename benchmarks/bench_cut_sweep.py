@@ -17,7 +17,7 @@ import argparse
 
 import jax
 
-from benchmarks.common import Report, timeit
+from benchmarks.common import Report, persist, timeit
 from repro.core import hier, stream
 from repro.data.powerlaw import rmat_stream
 
@@ -65,7 +65,10 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--mode", choices=("layered", "fused", "both"),
                     default="both")
+    ap.add_argument("--tag", default="cut_sweep",
+                    help="persist results as BENCH_<tag>.json")
     args = ap.parse_args()
     r = Report()
     r.header()
-    main(r, mode=args.mode)
+    derived = main(r, mode=args.mode)
+    persist(args.tag, r, derived)

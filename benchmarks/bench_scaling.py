@@ -8,55 +8,108 @@ is embarrassingly parallel; on the production mesh each device runs its
 own vmap group with zero update-path collectives — launch/dryrun.py proves
 that program compiles at 512 chips).
 
-Derived: aggregate updates/s per instance count + the weak-scaling
-efficiency vs 1 instance, and the projection to the paper's 34k instances.
+A/B (``--mode``): the sweep runs the layered reference cascade and/or the
+PRODUCTION DEFAULT (fused cascade + lazy layer-0 append) under the same
+``vmap`` — multi-instance fused throughput, the curve ROADMAP's
+"Fused-path follow-ons" asks for.  The default arm is labeled
+``fused_lazy`` because it carries BOTH optimizations; single-knob
+attribution (fused alone, lazy alone) is bench_update_rate's matched-pair
+matrix, not this sweep.
+
+Derived: per-variant aggregate updates/s per instance count, weak-scaling
+overhead vs 1 instance, the default/layered aggregate speedup, and the
+projection to the paper's 34k instances.
 """
 from __future__ import annotations
 
+import argparse
+
 import jax
 
-from benchmarks.common import Report, timeit
+from benchmarks.common import Report, persist, timeit
 from repro.core import distributed, stream
 from repro.data.powerlaw import instance_streams
 
+PROBE = dict(block=2048, blocks=8, cuts=(4096, 32768, 262144), scale=18)
+SMOKE = dict(block=512, blocks=4, cuts=(1024, 8192, 65536), scale=14)
 
-def main(report: Report | None = None):
+VARIANTS = dict(
+    layered=dict(fused=False, lazy_l0=False),
+    fused_lazy=dict(fused=True, lazy_l0=True),   # the production default
+)
+
+
+def main(report: Report | None = None, mode: str = "both",
+         smoke: bool = False):
     report = report or Report()
-    block, blocks = 2048, 8
-    cuts = (4096, 32768, 262144)
+    cfg = SMOKE if smoke else PROBE
+    block, blocks = cfg["block"], cfg["blocks"]
+    cuts, scale = cfg["cuts"], cfg["scale"]
     key = jax.random.PRNGKey(0)
-    run = jax.jit(lambda s, r, c, v: stream.ingest_instances(s, r, c, v)[0])
 
-    rates = {}
-    base_per_instance = None
-    for n_inst in (1, 2, 4, 8):
-        states = distributed.create_instances(n_inst, cuts, block)
-        rows, cols, vals = instance_streams(key, n_inst, blocks, block,
-                                            scale=18)
-        sec = timeit(run, states, rows, cols, vals, warmup=1, iters=3)
-        rate = n_inst * blocks * block / sec
-        rates[n_inst] = rate
-        if base_per_instance is None:
-            base_per_instance = rate
-        # one CPU core serializes the vmapped instances, so the honest
-        # scaling metric here is COORDINATION OVERHEAD: aggregate rate
-        # should stay ~flat as instances grow (time ∝ work, nothing
-        # superlinear).  Cross-device linearity is structural: the
-        # compiled 512-chip ingest has zero update-path collectives.
-        overhead = base_per_instance / rate
-        report.add(f"scaling_{n_inst}_instances", sec / blocks,
-                   f"{rate:,.0f} upd/s agg; overhead x{overhead:.2f}")
-    # projection: paper scale = 34,000 instances across 1,100 nodes.
-    # On this 1-core container instances serialize, so the honest projection
-    # uses per-instance rate x instance count (the dry-run proves the
-    # 512-chip program has no update-path collectives to break linearity).
-    proj = base_per_instance * 34000
-    report.add("scaling_projection_34k", 0.0,
-               f"{proj:,.0f} upd/s if linear (paper: 1.9e9)")
-    return dict(rates=rates, projection=proj)
+    if mode == "both":
+        wanted = ["layered", "fused_lazy"]
+    else:
+        wanted = ["layered"] if mode == "layered" else ["fused_lazy"]
+
+    out = {"config": dict(cfg, smoke=smoke, mode=mode)}
+    for name in wanted:
+        kw = VARIANTS[name]
+        run = jax.jit(lambda s, r, c, v, kw=kw: stream.ingest_instances(
+            s, r, c, v, **kw)[0])
+        rates = {}
+        base_per_instance = None
+        for n_inst in (1, 2, 4, 8):
+            states = distributed.create_instances(n_inst, cuts, block)
+            rows, cols, vals = instance_streams(key, n_inst, blocks, block,
+                                                scale=scale)
+            sec = timeit(run, states, rows, cols, vals, warmup=1, iters=3)
+            rate = n_inst * blocks * block / sec
+            rates[n_inst] = rate
+            if base_per_instance is None:
+                base_per_instance = rate
+            # one CPU core serializes the vmapped instances, so the honest
+            # scaling metric here is COORDINATION OVERHEAD: aggregate rate
+            # should stay ~flat as instances grow (time ∝ work, nothing
+            # superlinear).  Cross-device linearity is structural: the
+            # compiled 512-chip ingest has zero update-path collectives.
+            overhead = base_per_instance / rate
+            report.add(f"scaling_{name}_{n_inst}_instances", sec / blocks,
+                       f"{rate:,.0f} upd/s agg; overhead x{overhead:.2f}")
+        # projection: paper scale = 34,000 instances across 1,100 nodes.
+        # On this 1-core container instances serialize, so the honest
+        # projection uses per-instance rate x instance count (the dry-run
+        # proves the 512-chip program has no update-path collectives to
+        # break linearity).
+        proj = base_per_instance * 34000
+        report.add(f"scaling_{name}_projection_34k", 0.0,
+                   f"{proj:,.0f} upd/s if linear (paper: 1.9e9)")
+        out[name] = dict(rates=rates, projection=proj)
+    if len(wanted) == 2:
+        n_max = max(out["fused_lazy"]["rates"])
+        ratio = out["fused_lazy"]["rates"][n_max] \
+            / out["layered"]["rates"][n_max]
+        report.add("scaling_fused_lazy_speedup", 0.0,
+                   f"fused_lazy (production default)/layered @ {n_max} "
+                   f"instances = {ratio:.2f}x (single-knob attribution: "
+                   f"bench_update_rate)")
+        out["fused_lazy_speedup"] = ratio
+    return out
 
 
 if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--mode", choices=("layered", "fused", "both"),
+                    default="both", help="A/B: layered reference vs fused "
+                    "cascade under the same vmap")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small config for CI (~seconds)")
+    ap.add_argument("--tag", default="scaling",
+                    help="persist results as BENCH_<tag>.json "
+                    "(smoke runs get a _smoke suffix)")
+    args = ap.parse_args()
     r = Report()
     r.header()
-    main(r)
+    derived = main(r, mode=args.mode, smoke=args.smoke)
+    persist(args.tag, r, derived, config=derived.pop("config", None),
+            smoke=args.smoke)

@@ -7,14 +7,15 @@ fast layer.  We measure single-instance sustained updates/s for
   * hier      — the layered structure with geometric cuts,
 at the paper's workload shape (power-law R-MAT blocks, lax.scan ingest).
 
-A/B (``--mode``): ``layered`` is the per-layer reference cascade; ``fused``
-is the single-sort fused spill cascade (core/hier.py) with the lazy layer-0
-append and chunked pre-combine — the reproduction of the paper's "update
-cost scales with the fast layer" made concrete.  ``both`` (default) runs the
-two and reports the fused/layered speedup.
+A/B (``--mode``): the fused arm is reported as MATCHED PAIRS so the
+speedup is attributable — ``fused`` vs ``layered`` (chunk=1, lazy off)
+isolates the single-sort cascade, ``fused_lazy`` vs ``layered_lazy``
+(chunk=1, lazy on) isolates it under the append-buffer discipline, and
+``all_opts`` (fused + lazy + chunk) is the separate combined row that the
+earlier A/B used to conflate with the fusion win.
 
-Derived columns: updates/s, the hier/flat speedup, and the fused/layered
-speedup.
+Derived columns: updates/s, the hier/flat speedup, the matched
+fused/layered speedups, and the all-opts combined speedup.
 """
 from __future__ import annotations
 
@@ -23,7 +24,7 @@ import argparse
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import Report, timeit
+from benchmarks.common import Report, persist, timeit
 from repro.core import hier, stream
 from repro.data.powerlaw import rmat_stream
 
@@ -32,7 +33,17 @@ from repro.data.powerlaw import rmat_stream
 PROBE = dict(block=2048, blocks=32, cuts=(32768, 262144), scale=18)
 SMOKE = dict(block=512, blocks=8, cuts=(4096, 32768), scale=14)
 
-FUSED_CHUNK = 4  # stream blocks pre-combined per fused update
+FUSED_CHUNK = 4  # stream blocks pre-combined per update in the all-opts row
+
+# The attributable A/B matrix: each fused variant has a layered partner that
+# matches it on every other knob, plus the combined all-opts row.
+VARIANTS = dict(
+    layered=dict(fused=False, lazy_l0=False, chunk=1),
+    layered_lazy=dict(fused=False, lazy_l0=True, chunk=1),
+    fused=dict(fused=True, lazy_l0=False, chunk=1),
+    fused_lazy=dict(fused=True, lazy_l0=True, chunk=1),
+    all_opts=dict(fused=True, lazy_l0=True, chunk=FUSED_CHUNK),
+)
 
 
 def ingest_rate(cuts, block_size, n_blocks, scale=18, seed=0,
@@ -54,25 +65,33 @@ def main(report: Report | None = None, mode: str = "both",
     cuts, scale = cfg["cuts"], cfg["scale"]
     flat_cuts = (cuts[-1],)          # single large layer
 
-    out = {}
+    wanted = []
     if mode in ("layered", "both"):
-        sec_h, rate_h = ingest_rate(cuts, block, blocks, scale)
+        wanted += ["layered", "layered_lazy"]
+    if mode in ("fused", "both"):
+        wanted += ["fused", "fused_lazy", "all_opts"]
+
+    out = {"config": dict(cfg, smoke=smoke, mode=mode)}
+    for name in wanted:
+        sec, rate = ingest_rate(cuts, block, blocks, scale, **VARIANTS[name])
+        report.add(f"update_rate_{name}", sec / blocks, f"{rate:,.0f} upd/s")
+        out[f"rate_{name}"] = rate
+    if mode in ("layered", "both"):
         sec_f, rate_f = ingest_rate(flat_cuts, block, blocks, scale)
-        report.add("update_rate_hier", sec_h / blocks, f"{rate_h:,.0f} upd/s")
         report.add("update_rate_flat", sec_f / blocks, f"{rate_f:,.0f} upd/s")
         report.add("update_rate_speedup", 0.0,
-                   f"hier/flat = {rate_h / rate_f:.2f}x")
-        out.update(rate_hier=rate_h, rate_flat=rate_f,
-                   speedup=rate_h / rate_f)
-    if mode in ("fused", "both"):
-        sec_u, rate_u = ingest_rate(cuts, block, blocks, scale, fused=True,
-                                    lazy_l0=True, chunk=FUSED_CHUNK)
-        report.add("update_rate_fused", sec_u / blocks, f"{rate_u:,.0f} upd/s")
-        out.update(rate_fused=rate_u)
+                   f"hier/flat = {out['rate_layered'] / rate_f:.2f}x")
+        out.update(rate_flat=rate_f, rate_hier=out["rate_layered"],
+                   speedup=out["rate_layered"] / rate_f)
     if mode == "both":
-        report.add("update_rate_fused_speedup", 0.0,
-                   f"fused/layered = {out['rate_fused'] / out['rate_hier']:.2f}x")
-        out.update(fused_speedup=out["rate_fused"] / out["rate_hier"])
+        pairs = [("fused_speedup", "fused", "layered"),
+                 ("fused_lazy_speedup", "fused_lazy", "layered_lazy"),
+                 ("all_opts_speedup", "all_opts", "layered")]
+        for key, a, b in pairs:
+            ratio = out[f"rate_{a}"] / out[f"rate_{b}"]
+            report.add(f"update_rate_{key}", 0.0,
+                       f"{a}/{b} = {ratio:.2f}x")
+            out[key] = ratio
     return out
 
 
@@ -80,10 +99,15 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--mode", choices=("layered", "fused", "both"),
                     default="both", help="A/B: reference layered cascade vs "
-                    "single-sort fused cascade")
+                    "single-sort fused cascade (matched pairs)")
     ap.add_argument("--smoke", action="store_true",
                     help="small config for CI (~seconds)")
+    ap.add_argument("--tag", default="update_rate",
+                    help="persist results as BENCH_<tag>.json "
+                    "(smoke runs get a _smoke suffix)")
     args = ap.parse_args()
     r = Report()
     r.header()
-    main(r, mode=args.mode, smoke=args.smoke)
+    derived = main(r, mode=args.mode, smoke=args.smoke)
+    persist(args.tag, r, derived, config=derived.pop("config", None),
+            smoke=args.smoke)

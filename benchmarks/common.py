@@ -1,6 +1,14 @@
-"""Shared benchmark timing utilities."""
+"""Shared benchmark timing utilities + result persistence.
+
+Every benchmark entry point persists its rows and derived numbers as
+``BENCH_<tag>.json`` in the current working directory (the repo root when
+run as ``python -m benchmarks.<name>``), so the perf trajectory across PRs
+is a set of committed/uploaded JSON files instead of scrollback.
+"""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -31,3 +39,48 @@ class Report:
 
     def header(self):
         print("name,us_per_call,derived", flush=True)
+
+
+def persist(tag: str, report: Report, derived: dict | None = None,
+            config: dict | None = None, smoke: bool = False,
+            out_dir: str = ".") -> str:
+    """Write ``BENCH_<tag>.json`` with the report rows plus each
+    benchmark's structured return value; returns the path written.
+
+    ``config`` records the workload shape (block/cuts/scale/smoke...) so a
+    smoke run is never mistaken for a probe run when tables are rendered;
+    ``smoke=True`` additionally suffixes the tag with ``_smoke`` so CI
+    smoke runs never overwrite committed probe-run JSONs.
+    """
+    if smoke:
+        tag = f"{tag}_smoke"
+    payload = dict(
+        tag=tag,
+        timestamp=time.strftime("%Y-%m-%dT%H:%M:%S"),
+        jax_version=jax.__version__,
+        backend=jax.default_backend(),
+        device_count=jax.device_count(),
+        config=_jsonable(config or {}),
+        rows=[dict(name=n, us_per_call=us, derived=d)
+              for n, us, d in report.rows],
+        derived=_jsonable(derived or {}),
+    )
+    path = os.path.join(out_dir, f"BENCH_{tag}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    print(f"[bench] wrote {path}", flush=True)
+    return path
+
+
+def _jsonable(obj):
+    """Best-effort conversion of benchmark return values (may hold numpy/jax
+    scalars or tuple keys) into JSON-serializable structures."""
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if hasattr(obj, "item"):
+        return obj.item()
+    if isinstance(obj, (str, int, float, bool)) or obj is None:
+        return obj
+    return str(obj)

@@ -1,6 +1,10 @@
-"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from result JSONs.
+"""Render EXPERIMENTS.md tables from result JSONs.
 
     PYTHONPATH=src python -m benchmarks.make_experiments > /tmp/tables.md
+
+§Perf tables come from the ``BENCH_<tag>.json`` files the benchmark entry
+points persist (benchmarks/common.py::persist); §Dry-run and §Roofline
+come from the ``results/dryrun`` cell records (launch/dryrun.py).
 """
 from __future__ import annotations
 
@@ -11,6 +15,25 @@ import os
 from benchmarks.roofline import fmt_s, load_cells
 
 RESULTS = "results/dryrun"
+
+
+def perf_tables(pattern: str = "BENCH_*.json") -> str:
+    """One markdown table per persisted benchmark JSON (§Perf)."""
+    out = []
+    for path in sorted(glob.glob(pattern)):
+        with open(path) as f:
+            p = json.load(f)
+        out.append(f"\n#### `{os.path.basename(path)}` — "
+                   f"{p.get('backend', '?')} backend, "
+                   f"jax {p.get('jax_version', '?')}, "
+                   f"{p.get('timestamp', '?')}\n")
+        rows = ["| name | us/call | derived |", "|---|---|---|"]
+        for r in p.get("rows", []):
+            rows.append(f"| {r['name']} | {r['us_per_call']:.1f} | "
+                        f"{r['derived']} |")
+        out.append("\n".join(rows))
+    return "\n".join(out) if out else "\n(no BENCH_*.json found — run " \
+        "`python -m benchmarks.run` or any single benchmark entry point)"
 
 
 def dryrun_table(mesh: str) -> str:
@@ -102,6 +125,8 @@ def variants_table() -> str:
 
 
 def main(report=None):
+    print("\n### Perf — persisted benchmark runs\n")
+    print(perf_tables())
     for mesh in ("single", "multi"):
         if not os.path.isdir(os.path.join(RESULTS, mesh)):
             continue

@@ -1,8 +1,11 @@
 """Benchmark driver: one benchmark per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run [--tag full]
 
-Prints ``name,us_per_call,derived`` CSV rows:
+Prints ``name,us_per_call,derived`` CSV rows and persists everything
+(rows + each benchmark's structured return value) as ``BENCH_<tag>.json``
+at the repo root — the perf trajectory artifact CI uploads and
+EXPERIMENTS.md §Perf is rendered from (benchmarks/make_experiments.py):
   * bench_update_rate — Fig 2 claim: hierarchical vs flat update rate
   * bench_scaling     — Fig 3: aggregate rate vs instance count (+34k proj)
   * bench_cut_sweep   — §II: cut-value tuning curve
@@ -11,25 +14,35 @@ Prints ``name,us_per_call,derived`` CSV rows:
 """
 from __future__ import annotations
 
+import argparse
 import traceback
 
-from benchmarks.common import Report
+from benchmarks.common import Report, persist
 
 
-def main() -> None:
+def main(tag: str = "full") -> dict:
     report = Report()
     report.header()
     from benchmarks import (bench_cut_sweep, bench_kernels,
                             bench_scaling, bench_update_rate, roofline)
+    derived = {}
     for mod in (bench_update_rate, bench_scaling, bench_cut_sweep,
                 bench_kernels, roofline):
+        name = mod.__name__.rsplit(".", 1)[-1]
         try:
-            mod.main(report)
+            derived[name] = mod.main(report)
         except Exception as e:          # report, keep going
             report.add(f"{mod.__name__}_ERROR", 0.0,
                        f"{type(e).__name__}: {e}")
+            derived[name] = dict(error=f"{type(e).__name__}: {e}")
             traceback.print_exc()
+    persist(tag, report, derived)
+    return derived
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tag", default="full",
+                    help="persist results as BENCH_<tag>.json")
+    args = ap.parse_args()
+    main(tag=args.tag)

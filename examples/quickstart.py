@@ -35,6 +35,8 @@ print("row-extract neighbors of v0:",
       [(int(c), float(v)) for c, v, m in zip(cols, vals, mask) if m])
 
 # --- 3. hierarchical streaming updates (Fig 2) ------------------------------
+# hier.update runs the single-sort fused spill cascade by default (one
+# canonicalization per block); pass fused=False for the per-layer reference.
 h = hier.create(cuts=(64, 256, 1024), block_size=32)
 key = jax.random.PRNGKey(0)
 for step in range(32):

@@ -202,8 +202,17 @@ class D4MConfig:
     dtype: str = "float32"
     use_kernel: bool = False
     lazy_l0: bool = False               # append-buffer layer 0 (see §Perf)
+    fused: bool = True                  # single-sort fused spill cascade
+    chunk: int = 1                      # stream blocks pre-combined per update
 
     family: str = dataclasses.field(default="d4m", init=False)
+
+    def effective_chunk(self, blocks: int) -> int:
+        """Shared degrade policy for launch/cells.py and launch/probes.py:
+        chunk>1 needs the fused planner (layered layer 0 has no headroom
+        for a wider block) and a stream length it divides — else 1."""
+        c = max(self.chunk, 1)
+        return c if self.fused and blocks % c == 0 else 1
 
 
 D4M_SHAPES = {

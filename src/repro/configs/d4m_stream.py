@@ -5,6 +5,12 @@ Hierarchical associative-array streaming ingest: each device runs
 ``blocks_per_step`` R-MAT update blocks per device step — the §III
 experiment ("1,000 sets of 100,000 entries" per instance) expressed as one
 compiled step that launchers loop.
+
+The full hot-path knob set (``fused``/``lazy_l0``/``use_kernel``/``chunk``)
+survives the config layer: launch/cells.py and launch/probes.py thread all
+four into ``distributed.sharded_ingest_fn`` / ``hier.update`` so dry-runs
+and roofline probes measure the production (fused) path, not just the
+layered oracle.
 """
 from repro.configs.base import D4MConfig
 
@@ -17,6 +23,9 @@ def config() -> D4MConfig:
         blocks_per_step=8,
         instances_per_device=4,
         rmat_scale=22,
+        fused=True,
+        lazy_l0=True,
+        chunk=1,
     )
 
 
@@ -28,4 +37,7 @@ def smoke_config() -> D4MConfig:
         blocks_per_step=4,
         instances_per_device=2,
         rmat_scale=10,
+        fused=True,
+        lazy_l0=True,
+        chunk=2,
     )

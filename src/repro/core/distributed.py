@@ -63,15 +63,16 @@ def sharded_ingest_fn(mesh: Mesh, data_axes: Tuple[str, ...],
                       sr: Semiring = sr_mod.PLUS_TIMES,
                       lazy_l0: bool = False,
                       use_kernel: bool = False,
-                      fused: bool = False,
+                      fused: bool = True,
                       chunk: int = 1):
     """Build the distributed ingest step.
 
     States and streams are sharded over ``data_axes`` on their instance
     (leading) axis; each device scans its own instances — no collectives on
     the update path, exactly the paper's share-nothing design.  ``fused``
-    selects the single-sort fused spill cascade per instance (hier.py);
-    ``chunk`` pre-combines that many stream blocks per hierarchy update.
+    (default) runs the single-sort fused spill cascade per instance
+    (hier.py) — ``fused=False`` is the layered reference oracle; ``chunk``
+    pre-combines that many stream blocks per hierarchy update.
     """
     spec = P(data_axes)
 

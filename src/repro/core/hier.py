@@ -17,6 +17,12 @@ counter as a snapshot-to-store event).
 The structure is a pytree: `vmap` gives per-device instance batches and
 `shard_map` places instance groups on devices (core/distributed.py), matching
 the paper's 34,000 share-nothing instances.
+
+The single-sort fused cascade (``fused=True``) is the production default for
+``update``, ``flush`` and ``query_all``: the spill chain / drain / query is
+planned with scalar nnz arithmetic and executed as ONE canonicalization
+(``assoc.merge_many``).  The per-layer pairwise path stays available behind
+``fused=False`` as the reference oracle (tests/test_fused_cascade.py).
 """
 from __future__ import annotations
 
@@ -131,9 +137,16 @@ def _cascade(h: HierAssoc, sr: Semiring, use_kernel: bool = False,
         h, layers=tuple(layers), spills=spills, overflow=overflow)
 
 
-def _lazy_append(l0: AssocSegment, hi: Array, lo: Array, val: Array
-                 ) -> Tuple[AssocSegment, Array]:
+def _lazy_append(l0: AssocSegment, hi: Array, lo: Array, val: Array,
+                 n_live: Array | None = None) -> Tuple[AssocSegment, Array]:
     """Append a block into the layer-0 buffer (LSM memtable discipline).
+
+    ``n_live`` is the number of potentially-live slots in the block's prefix
+    (``sum(mask)`` for a compacted masked block, ``nnz`` for a canonical
+    one); the buffer's nnz advances by that count, not by the physical block
+    width, so sparse blocks stop inflating occupancy.  The block's sentinel
+    tail still gets written, but the next append starts at the new nnz and
+    overwrites it — every slot past nnz stays sentinel.
 
     The clamp keeps the write in-bounds, but when nnz > capacity - block it
     lands the block on top of live buffer slots [start, nnz).  Those entries
@@ -143,6 +156,8 @@ def _lazy_append(l0: AssocSegment, hi: Array, lo: Array, val: Array
     operation.
     """
     b = hi.shape[-1]
+    if n_live is None:
+        n_live = jnp.int32(b)
     start = jnp.minimum(l0.nnz, l0.capacity - b)
     clobbered = jnp.maximum(l0.nnz - start, 0).astype(jnp.int32)
     layer0 = AssocSegment(
@@ -150,13 +165,32 @@ def _lazy_append(l0: AssocSegment, hi: Array, lo: Array, val: Array
         lo=jax.lax.dynamic_update_slice(l0.lo, lo, (start,)),
         val=jax.lax.dynamic_update_slice(
             l0.val, val.astype(l0.val.dtype), (start,)),
-        nnz=start + jnp.int32(b))
+        nnz=start + jnp.int32(n_live))
     return layer0, clobbered
 
 
-def _plan_spill_depth(h: HierAssoc, block_slots: int) -> Array:
+def _compact_masked(rows: Array, cols: Array, vals: Array, mask: Array
+                    ) -> Tuple[Array, Array, Array]:
+    """Stable-partition a sentinel-blanked masked block: live entries to the
+    front, masked-out sentinels to the tail.  One O(B) scatter — no sort —
+    so the lazy-append fast path stays sort-free.  The destination indices
+    form a permutation (live slots [0, sum(mask)), dead slots from the back)
+    so every slot is written exactly once."""
+    mask = mask.astype(bool)        # callers may pass 0/1 ints; ~ needs bool
+    b = rows.shape[-1]
+    live_pos = jnp.cumsum(mask) - 1
+    dead_pos = b - jnp.cumsum(~mask)
+    dest = jnp.where(mask, live_pos, dead_pos).astype(jnp.int32)
+    scatter = lambda x: jnp.zeros_like(x).at[dest].set(x)
+    return scatter(rows), scatter(cols), scatter(vals)
+
+
+def _plan_spill_depth(h: HierAssoc, block_slots) -> Array:
     """Pure scalar arithmetic on per-layer nnz counters: the fused cascade's
-    destination layer for an incoming block of ``block_slots`` entries.
+    destination layer for an incoming block of ``block_slots`` entries
+    (a Python int for a dense block, or a traced scalar — ``sum(mask)`` —
+    for a masked one, so sparse blocks are planned at their true slot cost
+    instead of the block capacity).
 
     Layer 0 spills iff its slots plus the block exceed c_0; layer i spills
     iff every layer above it spills AND the accumulated slot count exceeds
@@ -191,46 +225,74 @@ def _update_fused(h: HierAssoc, rows: Array, cols: Array, vals: Array,
     destination layer.  With ``lazy_l0`` the no-spill branch degenerates to
     a pure append — zero sorts for the common case, the LSM memtable
     discipline fused with the paper's hierarchy.
+
+    Masked blocks are planned at their live-slot count ``sum(mask)`` (not
+    the block capacity B) and compacted front-first with one O(B) scatter,
+    so a sparse block costs only its live entries in occupancy — the old
+    capacity-based plan over-spilled on every masked block.
     """
     B = rows.shape[-1]
     vdtype = h.layers[0].dtype
     rows, cols, vals = assoc.mask_coo(rows, cols, vals.astype(vdtype), mask,
                                       sr)
-    depth = _plan_spill_depth(h, B)
+    if mask is None:
+        n_live = jnp.int32(B)
+    else:
+        n_live = jnp.sum(mask).astype(jnp.int32)
+        rows, cols, vals = _compact_masked(rows, cols, vals, mask)
+    depth = _plan_spill_depth(h, n_live)
     caps = h.capacities
     L = h.num_layers
 
-    # A block larger than c_0 always spills (occupancy >= B > c_0), so the
-    # append fast path is unreachable — and its fixed-size slice would not
-    # even fit layer 0.  Trace the merge path for branch 0 in that case.
+    # A block physically wider than c_0 cannot use the append fast path
+    # (its fixed-size slice would not fit layer 0) even when the mask-aware
+    # plan lands on depth 0 — branch 0 then runs the canonicalizing merge
+    # into layer 0 instead.
     lazy_append = lazy_l0 and B <= h.cuts[0]
+
+    def merge_to_depth(d: int):
+        if lazy_l0:
+            # Layer 0 is an append buffer (unsorted); fold it into the
+            # raw side so the kernel path sees true sorted runs only —
+            # also for d == 0, where the buffer re-canonicalizes in place.
+            l0 = h.layers[0]
+            raw = (jnp.concatenate([rows, l0.hi]),
+                   jnp.concatenate([cols, l0.lo]),
+                   jnp.concatenate([vals, l0.val]))
+            runs = h.layers[1:d + 1]
+        else:
+            raw = (rows, cols, vals)
+            runs = h.layers[:d + 1]
+        seg, ovf = assoc.merge_many(runs, *raw, out_capacity=caps[d],
+                                    sr=sr, use_kernel=use_kernel)
+        new_layers = tuple(assoc.empty(caps[i], vdtype, sr)
+                           for i in range(d)) + (seg,) + h.layers[d + 1:]
+        spills = h.spills.at[:d].add(1) if d else h.spills
+        return new_layers, spills, ovf
+
+    # The mask-aware plan admits nnz + n_live <= c_0, but the append
+    # physically writes B slots: only a MASKED block wider than the
+    # creation block_size (B > C_0 - c_0) can reach past capacity and
+    # clobber live entries — for every other shape the plan bound implies
+    # nnz + B <= C_0, so the fit check is statically true and must not be
+    # traced (a vmapped lax.cond executes both branches, which would bolt
+    # a full-width merge onto every no-spill append).
+    append_always_fits = mask is None or B <= caps[0] - h.cuts[0]
 
     def make_branch(d: int):
         def run(_):
             if d == 0 and lazy_append:
-                # No spill planned: append the raw block into the layer-0
-                # buffer.  The plan guarantees nnz + B <= c_0 < C_0, so the
-                # clobber count is zero in normal operation.
-                layer0, clobbered = _lazy_append(h.layers[0], rows, cols,
-                                                 vals)
-                return (layer0,) + h.layers[1:], h.spills, clobbered
-            if lazy_l0 and d > 0:
-                # Layer 0 is an append buffer (unsorted); fold it into the
-                # raw side so the kernel path sees true sorted runs only.
-                l0 = h.layers[0]
-                raw = (jnp.concatenate([rows, l0.hi]),
-                       jnp.concatenate([cols, l0.lo]),
-                       jnp.concatenate([vals, l0.val]))
-                runs = h.layers[1:d + 1]
-            else:
-                raw = (rows, cols, vals)
-                runs = h.layers[:d + 1]
-            seg, ovf = assoc.merge_many(runs, *raw, out_capacity=caps[d],
-                                        sr=sr, use_kernel=use_kernel)
-            new_layers = tuple(assoc.empty(caps[i], vdtype, sr)
-                               for i in range(d)) + (seg,) + h.layers[d + 1:]
-            spills = h.spills.at[:d].add(1) if d else h.spills
-            return new_layers, spills, ovf
+                def append(_):
+                    layer0, clobbered = _lazy_append(
+                        h.layers[0], rows, cols, vals, n_live=n_live)
+                    return (layer0,) + h.layers[1:], h.spills, clobbered
+
+                if append_always_fits:
+                    return append(None)
+                fits = h.layers[0].nnz + B <= caps[0]
+                return jax.lax.cond(fits, append,
+                                    lambda _: merge_to_depth(0), None)
+            return merge_to_depth(d)
         return run
 
     new_layers, spills, ovf = jax.lax.switch(
@@ -238,13 +300,12 @@ def _update_fused(h: HierAssoc, rows: Array, cols: Array, vals: Array,
     # Pressure flag for the spill-less last layer (same as the layered path).
     spills = spills.at[-1].add(
         (new_layers[-1].nnz > h.cuts[-1]).astype(jnp.int32))
-    n_new = B if mask is None else jnp.sum(mask)
     return dataclasses.replace(
         h,
         layers=new_layers,
         spills=spills,
         overflow=h.overflow + ovf,
-        n_updates=h.n_updates + jnp.int32(n_new),
+        n_updates=h.n_updates + n_live,
     )
 
 
@@ -253,7 +314,7 @@ def update(h: HierAssoc, rows: Array, cols: Array, vals: Array,
            sr: Semiring = sr_mod.PLUS_TIMES,
            use_kernel: bool = False,
            lazy_l0: bool = False,
-           fused: bool = False) -> HierAssoc:
+           fused: bool = True) -> HierAssoc:
     """Block-update: semiring-add a COO block into the hierarchy (Fig 2).
 
     ``lazy_l0=True`` (beyond-paper optimization, EXPERIMENTS.md §Perf):
@@ -266,9 +327,11 @@ def update(h: HierAssoc, rows: Array, cols: Array, vals: Array,
     which is exactly what the cut threshold compares against.  Restricted
     to plus.times: duplicate keys in the buffer must sum-combine.
 
-    ``fused=True`` routes through the single-sort fused spill cascade
-    (``_update_fused``): one canonicalization per block instead of up to
-    L+1, query-equivalent to this layered reference path.
+    ``fused=True`` (the production default) routes through the single-sort
+    fused spill cascade (``_update_fused``): one canonicalization per block
+    instead of up to L+1.  ``fused=False`` keeps the per-layer reference
+    cascade — the query-equivalent oracle the equivalence suite checks
+    against.
     """
     if lazy_l0 and sr.name != "plus.times":
         raise ValueError("lazy_l0 requires the plus.times semiring")
@@ -278,8 +341,10 @@ def update(h: HierAssoc, rows: Array, cols: Array, vals: Array,
     merged, ovf0 = assoc.from_coo(rows, cols, vals, rows.shape[-1], sr,
                                   mask=mask)
     if lazy_l0:
+        # merged is canonical (live prefix, sentinel tail): advance the
+        # buffer by its unique count, not the physical block width.
         layer0, ovf1 = _lazy_append(h.layers[0], merged.hi, merged.lo,
-                                    merged.val)
+                                    merged.val, n_live=merged.nnz)
     else:
         layer0, ovf1 = _merge(h.layers[0], merged, h.layers[0].capacity, sr,
                               use_kernel)
@@ -295,15 +360,27 @@ def update(h: HierAssoc, rows: Array, cols: Array, vals: Array,
 
 def query_all(h: HierAssoc, sr: Semiring = sr_mod.PLUS_TIMES,
               use_kernel: bool = False,
-              lazy_l0: bool = False) -> AssocSegment:
+              lazy_l0: bool = False,
+              fused: bool = True) -> AssocSegment:
     """Sum all layers into one canonical segment (paper: query path).
 
-    Pass ``lazy_l0=True`` when the hierarchy is operated with lazy layer-0
-    appends: the buffer is then merged as raw (unsorted) data, which the
-    kernel path must know about.
+    ``fused=True`` (default) runs ONE ``assoc.merge_many`` canonicalization
+    over every layer — layer 0's buffer rides the raw side, which is correct
+    whether it is a lazy append buffer or canonical (sorted data is a valid
+    unsorted input) — instead of L-1 pairwise merges at full
+    ``sum(capacities)`` width each.  ``fused=False`` keeps the pairwise
+    reference path; it needs ``lazy_l0=True`` when the hierarchy is operated
+    with lazy layer-0 appends so the buffer is merged as raw data.
     """
     cap = sum(h.capacities)
     l0 = h.layers[0]
+    if fused:
+        # No single-layer shortcut: layer 0 may be a lazy append buffer and
+        # the caller is not required to say so on the fused path — always
+        # canonicalize, so the result is correct for either discipline.
+        return assoc.merge_many(h.layers[1:], l0.hi, l0.lo, l0.val,
+                                out_capacity=cap, sr=sr,
+                                use_kernel=use_kernel)[0]
     if h.num_layers == 1:
         if lazy_l0:
             # The append buffer is unsorted and duplicated; canonicalize it
@@ -339,9 +416,46 @@ def total_nnz_upper_bound(h: HierAssoc) -> Array:
     return jnp.sum(h.nnz_per_layer())
 
 
+def _flush_fused(h: HierAssoc, sr: Semiring, use_kernel: bool) -> HierAssoc:
+    """Fused drain: ONE ``assoc.merge_many`` canonicalization folds every
+    layer into the last one (layer 0's buffer rides the raw side, so a lazy
+    append buffer needs no special-casing), instead of L-1 pairwise merges
+    at increasing widths.  Spill accounting matches the layered drain: one
+    event per non-empty source layer, plus the last-layer pressure flag."""
+    caps = h.capacities
+    l0 = h.layers[0]
+    seg, ovf = assoc.merge_many(h.layers[1:], l0.hi, l0.lo, l0.val,
+                                out_capacity=caps[-1], sr=sr,
+                                use_kernel=use_kernel)
+    spills = h.spills
+    # Match the layered drain's accounting: layer i records a spill event
+    # when any data exists in layers [0, i] — the pairwise drain cascades
+    # upstream contents THROUGH every intermediate layer, so emptiness of
+    # layer i alone does not suppress its event.
+    cum_nnz = jnp.int32(0)
+    for i in range(h.num_layers - 1):
+        cum_nnz = cum_nnz + h.layers[i].nnz
+        spills = spills.at[i].add((cum_nnz > 0).astype(jnp.int32))
+    spills = spills.at[-1].add((seg.nnz > h.cuts[-1]).astype(jnp.int32))
+    new_layers = tuple(assoc.empty(caps[i], l0.dtype, sr)
+                       for i in range(h.num_layers - 1)) + (seg,)
+    return dataclasses.replace(h, layers=new_layers, spills=spills,
+                               overflow=h.overflow + ovf)
+
+
 def flush(h: HierAssoc, sr: Semiring = sr_mod.PLUS_TIMES,
-          use_kernel: bool = False, lazy_l0: bool = False) -> HierAssoc:
-    """Force-spill every layer downward (checkpoint/drain path)."""
+          use_kernel: bool = False, lazy_l0: bool = False,
+          fused: bool = True) -> HierAssoc:
+    """Force-spill every layer downward (checkpoint/drain path).
+
+    ``fused=True`` (default) drains with a single canonicalization
+    (``_flush_fused``); ``fused=False`` keeps the pairwise per-layer
+    reference drain.  Both record the same spill telemetry as the update
+    paths: a spill event per non-empty source layer and the ``spills[-1]``
+    pressure bump when the drained last layer exceeds its cut.
+    """
+    if fused:
+        return _flush_fused(h, sr, use_kernel)
     layers = list(h.layers)
     spills = h.spills
     overflow = h.overflow
@@ -353,5 +467,10 @@ def flush(h: HierAssoc, sr: Semiring = sr_mod.PLUS_TIMES,
         layers[i], layers[i + 1] = new_src, new_dst
         spills = spills.at[i].add(moved)
         overflow = overflow + ovf
+    # Last-layer pressure flag, same as _cascade and _update_fused record it
+    # on the update path — without it spill telemetry drifts between the
+    # update and drain paths.
+    spills = spills.at[-1].add(
+        (layers[-1].nnz > h.cuts[-1]).astype(jnp.int32))
     return dataclasses.replace(h, layers=tuple(layers), spills=spills,
                                overflow=overflow)

@@ -8,8 +8,9 @@ overhead — the TPU analogue of the paper's in-process update loop).
 ``chunk=T_inner`` pre-combines T_inner consecutive stream blocks into one
 larger block per hierarchy update, so their dedup/merge happens in a single
 sort — the same amortization as the paper's blocking of 100,000-entry sets,
-one level up.  ``fused=True`` routes each block through the single-sort
-fused spill cascade (core/hier.py) instead of the layered reference path.
+one level up.  ``fused=True`` (the default) routes each block through the
+single-sort fused spill cascade (core/hier.py); ``fused=False`` selects the
+layered reference path (the equivalence oracle).
 
 Instances: `ingest` is written for one hierarchy and one [T, B] block stream;
 `jax.vmap` maps it over an instances axis, `core.distributed` places instance
@@ -34,7 +35,7 @@ def ingest(h: HierAssoc, rows: Array, cols: Array, vals: Array,
            sr: Semiring = sr_mod.PLUS_TIMES,
            use_kernel: bool = False,
            lazy_l0: bool = False,
-           fused: bool = False,
+           fused: bool = True,
            chunk: int = 1,
            ) -> Tuple[HierAssoc, dict]:
     """Scan a [T, B] stream of update blocks into the hierarchy.
@@ -83,7 +84,7 @@ def ingest_jit(cuts: Tuple[int, ...], block_size: int, dtype=jnp.float32,
                sr: Semiring = sr_mod.PLUS_TIMES, *,
                use_kernel: bool = False,
                lazy_l0: bool = False,
-               fused: bool = False,
+               fused: bool = True,
                chunk: int = 1):
     """Build a jitted (state, stream) -> (state, telemetry) ingest fn.
 
@@ -117,7 +118,7 @@ def ingest_instances(states: HierAssoc, rows: Array, cols: Array, vals: Array,
                      sr: Semiring = sr_mod.PLUS_TIMES,
                      use_kernel: bool = False,
                      lazy_l0: bool = False,
-                     fused: bool = False,
+                     fused: bool = True,
                      chunk: int = 1):
     """vmapped ingest: states is an instance-batched HierAssoc pytree and the
     stream arrays are [I, T, B]."""

@@ -398,12 +398,17 @@ def _d4m_cell(arch: str, shape: str, mesh: Mesh, variant: str = "baseline"
         blocks = info["blocks"]
         # scale the cuts with the block size (paper: cuts are tunable)
         cuts = scaled_cuts(cfg.cuts, block)
+        chunk = cfg.effective_chunk(blocks)
         states_abs = jax.eval_shape(
             lambda: distributed.create_instances(n_inst, cuts, block))
         stream_abs = (sds((n_inst, blocks, block), I32),
                       sds((n_inst, blocks, block), I32),
                       sds((n_inst, blocks, block), F32))
-        fn = distributed.sharded_ingest_fn(mesh, axes, lazy_l0=cfg.lazy_l0)
+        # full knob set from the config — the dry-run lowers the production
+        # (fused) ingest, not just the layered oracle
+        fn = distributed.sharded_ingest_fn(
+            mesh, axes, lazy_l0=cfg.lazy_l0, use_kernel=cfg.use_kernel,
+            fused=cfg.fused, chunk=chunk)
         lowered = fn.lower(states_abs, *stream_abs)
         updates = n_inst * blocks * block
         # model flops: sort-network + segment-combine per update ~
@@ -412,7 +417,9 @@ def _d4m_cell(arch: str, shape: str, mesh: Mesh, variant: str = "baseline"
         meta = dict(arch=arch, shape=shape, family="d4m", kind="ingest",
                     n_instances=n_inst, updates=updates, tokens=updates,
                     model_flops=float(updates) * (math.log2(c0) ** 2),
-                    dtype=cfg.dtype, variant=variant)
+                    dtype=cfg.dtype, variant=variant,
+                    fused=cfg.fused, lazy_l0=cfg.lazy_l0,
+                    use_kernel=cfg.use_kernel, chunk=chunk)
         return lowered, meta
     if info["kind"] == "query":
         states_abs = jax.eval_shape(

@@ -33,7 +33,16 @@ def run(args) -> dict:
     states = distributed.create_instances(
         args.instances, cuts, args.block_size)
 
-    ingest = jax.jit(lambda s, r, c, v: stream.ingest_instances(s, r, c, v))
+    fused = not getattr(args, "layered", False)
+    # "auto" couples the append buffer to the fused default; "on"/"off"
+    # decouple the two knobs for A/B runs
+    lazy_arg = getattr(args, "lazy_l0", "auto")
+    lazy_l0 = fused if lazy_arg == "auto" else lazy_arg == "on"
+    chunk = getattr(args, "chunk", 1)
+    use_kernel = getattr(args, "use_kernel", False)
+    ingest = jax.jit(lambda s, r, c, v: stream.ingest_instances(
+        s, r, c, v, fused=fused, lazy_l0=lazy_l0, chunk=chunk,
+        use_kernel=use_kernel))
 
     start_round = 0
     if args.ckpt_dir and args.resume:
@@ -42,6 +51,10 @@ def run(args) -> dict:
             states = restore(args.ckpt_dir, last, states)
             start_round = last
             print(f"[resume] round {last}")
+    # spill counters in the state are cumulative since CREATION; remember
+    # the restored baseline so the fast-layer fraction below only accounts
+    # for this run's updates.
+    spills_l0_baseline = int(jnp.sum(states.spills[:, 0]))
 
     blocks_per_round = max(args.blocks // args.rounds, 1)
     total_updates = 0
@@ -66,11 +79,15 @@ def run(args) -> dict:
         if args.ckpt_dir and (rnd + 1) % args.ckpt_every == 0:
             save(args.ckpt_dir, rnd + 1, states)
 
-    # hierarchy telemetry: how much traffic stayed in fast memory?
-    n_blocks_total = (args.rounds - start_round) * blocks_per_round
-    spills_l0 = int(jnp.sum(spill_counts[:, 0])) if spill_counts is not None \
-        else 0
-    frac_fast = 1.0 - spills_l0 / max(args.instances * n_blocks_total, 1)
+    # hierarchy telemetry: how much traffic stayed in fast memory?  A spill
+    # can occur at most once per hierarchy UPDATE, and chunking folds
+    # ``chunk`` stream blocks into one update — normalize by updates, not
+    # raw blocks, or the fast-layer fraction inflates by 1 - 1/chunk.
+    n_updates_total = ((args.rounds - start_round) * blocks_per_round
+                       // max(chunk, 1))
+    spills_l0 = (int(jnp.sum(spill_counts[:, 0])) - spills_l0_baseline) \
+        if spill_counts is not None else 0
+    frac_fast = 1.0 - spills_l0 / max(args.instances * n_updates_total, 1)
     rate = total_updates / wall if wall else 0.0
     return dict(updates_per_s=rate, total_updates=total_updates,
                 wall_s=wall, frac_blocks_layer0=frac_fast,
@@ -91,6 +108,18 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=4)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--verbose", action="store_true")
+    ap.add_argument("--layered", action="store_true",
+                    help="reference per-layer cascade instead of the fused "
+                    "default (A/B oracle)")
+    ap.add_argument("--lazy-l0", dest="lazy_l0",
+                    choices=("auto", "on", "off"), default="auto",
+                    help="layer-0 append buffer; auto = follow the fused "
+                    "default")
+    ap.add_argument("--chunk", type=int, default=1,
+                    help="stream blocks pre-combined per hierarchy update "
+                    "(fused only; must divide blocks/rounds)")
+    ap.add_argument("--use-kernel", dest="use_kernel", action="store_true",
+                    help="Pallas merge kernels (interpret mode off-TPU)")
     args = ap.parse_args()
     out = run(args)
     print(f"sustained {out['updates_per_s']:,.0f} updates/s over "

@@ -205,13 +205,22 @@ def d4m_corrected(arch: str, shape: str, mesh: Mesh,
     spec = PartitionSpec(axes)
     probes = {}
 
+    # ``chunk`` pre-combines that many stream blocks per hierarchy update
+    # (stream.ingest semantics): probe updates are chunk*block wide and the
+    # scan depth shrinks to blocks/chunk.
+    chunk = cfg.effective_chunk(blocks)
+    upd_block = block * chunk
+    n_updates = blocks // chunk
+
     for tp in (1, 2):
         def unrolled(states, rows, cols, vals, tp=tp):
             def one(h, r, c, v):
                 for t in range(tp):
                     h = hier.update(h, r[t], c[t], v[t],
                                     sr=sr_mod.PLUS_TIMES,
-                                    lazy_l0=cfg.lazy_l0)
+                                    use_kernel=cfg.use_kernel,
+                                    lazy_l0=cfg.lazy_l0,
+                                    fused=cfg.fused)
                 return h
             return jax.vmap(one)(states, rows, cols, vals)
 
@@ -220,15 +229,15 @@ def d4m_corrected(arch: str, shape: str, mesh: Mesh,
             check_vma=False))
         states_abs = jax.eval_shape(
             lambda: distributed.create_instances(n_inst, cuts, block))
-        stream = (sds((n_inst, tp, block), I32),
-                  sds((n_inst, tp, block), I32),
-                  sds((n_inst, tp, block), F32))
+        stream = (sds((n_inst, tp, upd_block), I32),
+                  sds((n_inst, tp, upd_block), I32),
+                  sds((n_inst, tp, upd_block), F32))
         with mesh:
             co = f.lower(states_abs, *stream).compile()
         probes[f"ingest_T{tp}"] = extract(co)
     p1, p2 = probes["ingest_T1"], probes["ingest_T2"]
     delta = {m: p2[m] - p1[m] for m in METRICS}
-    corrected = _combine(p1, delta, blocks - 1)
+    corrected = _combine(p1, delta, n_updates - 1)
     return dict(corrected=corrected, probes=probes)
 
 

@@ -28,6 +28,47 @@ def test_checkpoint_roundtrip_mixed_tree(tmp_path):
     assert r["h"].cuts == h.cuts          # static fields from template
 
 
+def test_checkpoint_midstream_hier_roundtrip(tmp_path):
+    """Save/restore a MID-STREAM HierAssoc driven by the fused+lazy default
+    path: non-empty lazy layer-0 append buffer, non-zero spills/overflow/
+    n_updates.  The restored state must answer query_all identically and
+    continued fused ingest must match an uncheckpointed run bit-for-bit."""
+    import numpy as _np
+    rng = _np.random.default_rng(42)
+    steps, block, nkeys = 16, 8, 10 ** 6        # ~all-unique: forces drops
+    cut_at = 13
+    R = jnp.asarray(rng.integers(0, nkeys, (steps, block)), jnp.int32)
+    C = jnp.asarray(rng.integers(0, nkeys, (steps, block)), jnp.int32)
+    V = jnp.asarray(rng.normal(size=(steps, block)), jnp.float32)
+    h0 = hier.create((8, 16, 32), 8)            # tiny last layer
+    mid, _ = stream.ingest(h0, R[:cut_at], C[:cut_at], V[:cut_at],
+                           fused=True, lazy_l0=True)
+    # the checkpointed state is genuinely mid-stream
+    assert int(mid.layers[0].nnz) > 0           # lazy append buffer live
+    assert int(np.sum(np.asarray(mid.spills))) > 0
+    assert int(mid.overflow) > 0
+    assert int(mid.n_updates) == cut_at * block
+
+    save(str(tmp_path), cut_at, mid)
+    restored = restore(str(tmp_path), cut_at, hier.create((8, 16, 32), 8))
+    assert restored.cuts == mid.cuts
+    for a, b in zip(jax.tree.leaves(mid), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    q_mid = hier.query_all(mid, lazy_l0=True)
+    q_res = hier.query_all(restored, lazy_l0=True)
+    np.testing.assert_array_equal(np.asarray(q_mid.hi), np.asarray(q_res.hi))
+    np.testing.assert_array_equal(np.asarray(q_mid.val),
+                                  np.asarray(q_res.val))
+
+    cont_ckpt, _ = stream.ingest(restored, R[cut_at:], C[cut_at:],
+                                 V[cut_at:], fused=True, lazy_l0=True)
+    cont_live, _ = stream.ingest(mid, R[cut_at:], C[cut_at:], V[cut_at:],
+                                 fused=True, lazy_l0=True)
+    for a, b in zip(jax.tree.leaves(cont_ckpt), jax.tree.leaves(cont_live)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(cont_ckpt.n_updates) == steps * block
+
+
 def test_checkpoint_atomicity_partial_dir_ignored(tmp_path):
     state = dict(w=jnp.ones(3))
     save(str(tmp_path), 1, state)

@@ -99,7 +99,12 @@ def test_d4m_smoke():
     h = hier.create(cfg.cuts, cfg.block_size)
     r, c, v = rmat_stream(KEY, cfg.blocks_per_step, cfg.block_size,
                           cfg.rmat_scale)
-    h2, telem = jax.jit(stream.ingest)(h, r, c, v)
+    # the smoke config exercises the full knob set the launch layer plumbs
+    # (fused + lazy_l0 + chunk>1)
+    run = jax.jit(lambda h, r, c, v: stream.ingest(
+        h, r, c, v, use_kernel=cfg.use_kernel, lazy_l0=cfg.lazy_l0,
+        fused=cfg.fused, chunk=cfg.chunk))
+    h2, telem = run(h, r, c, v)
     assert int(h2.n_updates) == cfg.blocks_per_step * cfg.block_size
     assert int(h2.overflow) == 0
 

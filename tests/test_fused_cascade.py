@@ -116,7 +116,9 @@ def test_fused_overflow_counts_drops():
 
 def test_lazy_l0_clobber_is_counted():
     """Regression: appending past layer-0 capacity must surface in overflow
-    instead of silently destroying live entries."""
+    instead of silently destroying live entries.  Pinned to the layered
+    reference path — the fused planner structurally avoids the clobber by
+    spilling an over-full buffer instead of appending into it."""
     h = hier.create((4, 1024), block_size=4)
     # bypass the cascade: force a layer 0 with nnz beyond capacity - block
     l0 = h.layers[0]
@@ -129,8 +131,15 @@ def test_lazy_l0_clobber_is_counted():
     h = dataclasses.replace(h, layers=(full,) + h.layers[1:])
     h2 = hier.update(h, jnp.full((4,), 1, jnp.int32),
                      jnp.full((4,), 2, jnp.int32), jnp.ones((4,)),
-                     lazy_l0=True)
+                     lazy_l0=True, fused=False)
     assert int(h2.overflow) == 4  # the whole append landed on live slots
+    # the fused plan routes the same corrupted state through a spill merge:
+    # nothing is destroyed, nothing overflows
+    h3 = hier.update(h, jnp.full((4,), 1, jnp.int32),
+                     jnp.full((4,), 2, jnp.int32), jnp.ones((4,)),
+                     lazy_l0=True, fused=True)
+    assert int(h3.overflow) == 0
+    assert int(h3.spills[0]) == 1
 
 
 @settings(max_examples=15, deadline=None)
@@ -174,6 +183,173 @@ def test_flush_spills_only_nonempty_layers():
     flushed = hier.flush(hf)
     assert np.all(np.asarray(flushed.nnz_per_layer())[:-1] == 0)
     assert np.asarray(flushed.spills).sum() > np.asarray(hf.spills).sum()
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+@pytest.mark.parametrize("lazy_l0", [False, True])
+def test_fused_flush_matches_layered(use_kernel, lazy_l0):
+    """Fused drain (one merge_many) == pairwise reference drain: contents,
+    nnz placement, spill telemetry and overflow."""
+    R, C, V = _stream(8, steps=20, block=8, nkeys=40)
+    h0 = hier.create((16, 64, 512), 8)
+    hf, _ = stream.ingest(h0, R, C, V, lazy_l0=lazy_l0,
+                          use_kernel=use_kernel)
+    fused = hier.flush(hf, use_kernel=use_kernel, lazy_l0=lazy_l0,
+                       fused=True)
+    layered = hier.flush(hf, use_kernel=use_kernel, lazy_l0=lazy_l0,
+                         fused=False)
+    np.testing.assert_allclose(_dense(fused, 40), _dense(layered, 40),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(fused.nnz_per_layer()),
+                                  np.asarray(layered.nnz_per_layer()))
+    np.testing.assert_array_equal(np.asarray(fused.spills),
+                                  np.asarray(layered.spills))
+    assert int(fused.overflow) == int(layered.overflow)
+    assert np.all(np.asarray(fused.nnz_per_layer())[:-1] == 0)
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+@pytest.mark.parametrize("lazy_l0", [False, True])
+def test_fused_query_all_matches_layered(use_kernel, lazy_l0):
+    """Fused query (one merge_many over all layers) == pairwise reference."""
+    R, C, V = _stream(9, steps=24, block=8, nkeys=35)
+    h0 = hier.create((16, 64, 512), 8)
+    hf, _ = stream.ingest(h0, R, C, V, lazy_l0=lazy_l0,
+                          use_kernel=use_kernel)
+    q_fused = hier.query_all(hf, use_kernel=use_kernel, lazy_l0=lazy_l0,
+                             fused=True)
+    q_ref = hier.query_all(hf, use_kernel=use_kernel, lazy_l0=lazy_l0,
+                           fused=False)
+    np.testing.assert_allclose(
+        np.asarray(assoc.to_dense(q_fused, 35, 35)),
+        np.asarray(assoc.to_dense(q_ref, 35, 35)), rtol=1e-4, atol=1e-5)
+    assert int(q_fused.nnz) == int(q_ref.nnz)
+
+
+def test_flush_records_last_layer_pressure():
+    """Drain telemetry must not drift from the update paths: both flush
+    variants record the spills[-1] pressure bump that _cascade and
+    _update_fused record when the last layer exceeds its cut."""
+    R, C, V = _stream(10, steps=30, block=16, nkeys=10 ** 6)  # ~all unique
+    h0 = hier.create((16, 32, 64), block_size=16)   # tiny last cut
+    hf, _ = stream.ingest(h0, R, C, V)
+    for fused in (True, False):
+        flushed = hier.flush(hf, fused=fused)
+        assert int(flushed.layers[-1].nnz) > 64
+        assert int(flushed.spills[-1]) == int(hf.spills[-1]) + 1, fused
+
+
+# ------------------------------------------------------------- masked -------
+
+
+def test_masked_plan_uses_live_slots_not_capacity():
+    """A masked block with sum(mask) << B provably takes the no-spill branch
+    where the old capacity-based plan spilled."""
+    h = hier.create((20, 64, 256), block_size=16)
+    r = jnp.arange(16, dtype=jnp.int32)
+    h = hier.update(h, r, r, jnp.ones(16), lazy_l0=True)   # occupancy 16
+    mask = jnp.arange(16) < 2                              # 2 live slots
+    # capacity-based plan (the old behavior) would spill: 16 + 16 > 20
+    assert int(hier._plan_spill_depth(h, 16)) == 1
+    # mask-aware plan: 16 + 2 <= 20 -> layer 0, no spill
+    assert int(hier._plan_spill_depth(h, jnp.sum(mask))) == 0
+    h2 = hier.update(h, r, r, jnp.ones(16), mask=mask, lazy_l0=True)
+    assert np.asarray(h2.spills).sum() == 0                # no-spill branch
+    assert int(h2.layers[0].nnz) == 18                     # 16 + sum(mask)
+    assert int(h2.layers[1].nnz) == 0
+    assert int(h2.n_updates) == 18
+    dense = np.asarray(assoc.to_dense(
+        hier.query_all(h2, lazy_l0=True), 16, 16))
+    np.testing.assert_allclose(np.diag(dense), [2.0, 2.0] + [1.0] * 14)
+
+
+@pytest.mark.parametrize("lazy_l0", [False, True])
+def test_masked_fused_equals_layered(lazy_l0):
+    """Random masks across a stream: fused (mask-aware planned + compacted)
+    == layered reference, including the n_updates accounting."""
+    R, C, V = _stream(11, steps=25, block=8, nkeys=30)
+    rng = np.random.default_rng(11)
+    M = jnp.asarray(rng.integers(0, 2, (25, 8)), bool)
+    h0 = hier.create((16, 64, 256), 8)
+    hf, hl = h0, h0
+    for t in range(25):
+        hf = hier.update(hf, R[t], C[t], V[t], mask=M[t], lazy_l0=lazy_l0,
+                         fused=True)
+        hl = hier.update(hl, R[t], C[t], V[t], mask=M[t], lazy_l0=lazy_l0,
+                         fused=False)
+    np.testing.assert_allclose(
+        np.asarray(assoc.to_dense(hier.query_all(hf, lazy_l0=lazy_l0), 30,
+                                  30)),
+        np.asarray(assoc.to_dense(hier.query_all(hl, lazy_l0=lazy_l0,
+                                                 fused=False), 30, 30)),
+        rtol=1e-4, atol=1e-5)
+    assert int(hf.overflow) == int(hl.overflow) == 0
+    assert int(hf.n_updates) == int(hl.n_updates) == int(jnp.sum(M))
+
+
+def test_masked_depth0_merge_folds_lazy_buffer_kernel():
+    """Regression: a masked block WIDER than c_0 can now plan depth 0
+    (mask-aware occupancy), where branch 0 must fold the unsorted lazy
+    layer-0 buffer into the raw side — feeding it to the kernel as a
+    canonical run double-counts duplicate keys."""
+    h = hier.create((8, 64, 256), block_size=8)
+    rep = jnp.full((8,), 3, jnp.int32)
+    h = hier.update(h, rep, rep, jnp.ones(8), lazy_l0=True)  # raw duplicates
+    assert int(h.layers[0].nnz) == 8
+    rows = jnp.full((16,), 5, jnp.int32)                     # B=16 > c_0=8
+    mask = jnp.zeros((16,), bool)                            # 0 live slots
+    assert int(hier._plan_spill_depth(h, jnp.sum(mask))) == 0
+    h2 = hier.update(h, rows, rows, jnp.ones(16), mask=mask,
+                     lazy_l0=True, use_kernel=True)
+    dense = np.asarray(assoc.to_dense(
+        hier.query_all(h2, use_kernel=True, lazy_l0=True), 8, 8))
+    assert dense[3, 3] == 8.0            # duplicates combined exactly once
+    assert int(h2.overflow) == 0
+
+
+def test_wide_masked_block_never_clobbers_lazy_buffer():
+    """Regression: the mask-aware plan admits nnz + n_live <= c_0, but a
+    block physically wider than the creation block_size could clobber live
+    buffer slots on append — branch 0 must fall back to an in-place merge
+    when the write would not fit."""
+    h = hier.create((20, 64, 256), block_size=4)
+    for i in range(4):                    # fill layer 0 to nnz = 16
+        r = jnp.arange(4 * i, 4 * i + 4, dtype=jnp.int32)
+        h = hier.update(h, r, r, jnp.ones(4), lazy_l0=True)
+    m1 = jnp.zeros((4,), bool).at[0].set(True)
+    h = hier.update(h, jnp.full((4,), 30, jnp.int32),
+                    jnp.full((4,), 30, jnp.int32), jnp.ones(4), mask=m1,
+                    lazy_l0=True)         # nnz = 17
+    assert int(h.layers[0].nnz) == 17
+    rows = jnp.arange(40, 56, dtype=jnp.int32)       # B=16 <= c_0=20
+    mask = jnp.arange(16) < 2                        # 2 live: 17+2 <= 20
+    assert int(hier._plan_spill_depth(h, jnp.sum(mask))) == 0
+    h2 = hier.update(h, rows, rows, jnp.ones(16), mask=mask, lazy_l0=True)
+    # nothing lost: all 17 live entries plus the 2 masked-in survive
+    assert int(h2.overflow) == 0
+    dense = np.asarray(assoc.to_dense(
+        hier.query_all(h2, lazy_l0=True), 60, 60))
+    np.testing.assert_allclose(np.diag(dense)[:16], np.ones(16))
+    assert dense[30, 30] == 1.0
+    assert dense[40, 40] == 1.0 and dense[41, 41] == 1.0
+
+
+@pytest.mark.parametrize("mask_dtype", [bool, jnp.int32],
+                         ids=["bool", "int01"])
+def test_masked_compaction_is_a_permutation(mask_dtype):
+    """_compact_masked moves live entries front-first (stable) and parks
+    sentinels at the tail — every slot written exactly once.  Int 0/1 masks
+    must behave like boolean ones (regression: bitwise ~ on an int mask
+    produced out-of-bounds scatter destinations)."""
+    rows = jnp.asarray([5, 7, 1, 9, 3, 2], jnp.int32)
+    mask = jnp.asarray([True, False, True, False, True, True]).astype(
+        mask_dtype)
+    from repro.core.assoc import SENTINEL, mask_coo
+    r, c, v = mask_coo(rows, rows, jnp.ones(6), mask, semiring.PLUS_TIMES)
+    cr, cc, cv = hier._compact_masked(r, c, v, mask)
+    np.testing.assert_array_equal(np.asarray(cr)[:4], [5, 1, 3, 2])
+    assert np.all(np.asarray(cr)[4:] == SENTINEL)
+    np.testing.assert_array_equal(np.asarray(cv)[:4], np.ones(4))
 
 
 def test_lazy_l0_kernel_spill_not_corrupted():
