@@ -1,0 +1,94 @@
+"""Instance-batched A/B: batch-mode matrix at the production vmap width.
+
+The paper's headline number comes from ~30 instances PER NODE (34,000 over
+1,100 nodes), so the instance-batched layout is the production layout —
+and it is exactly where the fused cascade used to lose its win: a vmapped
+``lax.switch`` lowers to select-over-all-branches, charging every instance
+every spill depth's merge on every step (EXPERIMENTS.md §Multi-instance
+scaling recorded ~parity with the layered oracle).
+
+This benchmark pins the divergence fix as its own tracked artifact
+(``BENCH_instances.json``): one spill-inducing stream, one instance count
+(I >= 8), all four execution strategies —
+
+  * ``layered``          — reference per-layer cascade (vmapped lax.conds,
+                           which also execute both sides under vmap),
+  * ``fused_switch``     — PRE-fix fused layout (vmapped lax.switch),
+  * ``fused_branchfree`` — one masked fixed-shape merge per instance
+                           (hier._fused_execute_planned under vmap),
+  * ``fused_bucketed``   — production default: plan all depths, branch
+                           once per step on the deepest
+                           (stream.update_instances).
+
+Derived: per-variant aggregate updates/s, each fused mode's speedup over
+``layered`` and over ``fused_switch``.  The acceptance bar for the
+divergence fix is bucketed/layered >= 1.5x at I >= 8 (ISSUE 3).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from benchmarks.common import Report, persist, timeit
+from repro.core import distributed, stream
+from repro.data.powerlaw import instance_streams
+
+# spill-inducing: c0 = 2 blocks of slots, so layer-0 spills every ~2 steps
+# and deeper spills occur within the stream
+PROBE = dict(block=2048, blocks=16, cuts=(4096, 32768, 262144), scale=18,
+             instances=8)
+SMOKE = dict(block=256, blocks=8, cuts=(512, 4096, 32768), scale=12,
+             instances=8)
+
+VARIANTS = dict(
+    layered=dict(fused=False, lazy_l0=False),
+    fused_switch=dict(fused=True, lazy_l0=True, batch_mode="switch"),
+    fused_branchfree=dict(fused=True, lazy_l0=True, batch_mode="branchfree"),
+    fused_bucketed=dict(fused=True, lazy_l0=True, batch_mode="bucketed"),
+)
+
+
+def main(report: Report | None = None, smoke: bool = False):
+    report = report or Report()
+    cfg = SMOKE if smoke else PROBE
+    block, blocks = cfg["block"], cfg["blocks"]
+    cuts, scale, n_inst = cfg["cuts"], cfg["scale"], cfg["instances"]
+    key = jax.random.PRNGKey(0)
+    rows, cols, vals = instance_streams(key, n_inst, blocks, block,
+                                        scale=scale)
+
+    out = {"config": dict(cfg, smoke=smoke)}
+    for name, kw in VARIANTS.items():
+        run = jax.jit(lambda s, r, c, v, kw=kw: stream.ingest_instances(
+            s, r, c, v, **kw)[0])
+        states = distributed.create_instances(n_inst, cuts, block)
+        sec = timeit(run, states, rows, cols, vals, warmup=1, iters=3)
+        rate = n_inst * blocks * block / sec
+        out[f"rate_{name}"] = rate
+        report.add(f"instances_{name}", sec / blocks,
+                   f"{rate:,.0f} upd/s agg @ {n_inst} instances")
+    for name in ("fused_switch", "fused_branchfree", "fused_bucketed"):
+        vs_layered = out[f"rate_{name}"] / out["rate_layered"]
+        vs_switch = out[f"rate_{name}"] / out["rate_fused_switch"]
+        report.add(f"instances_{name}_speedup", 0.0,
+                   f"{name}/layered = {vs_layered:.2f}x; "
+                   f"{name}/fused_switch = {vs_switch:.2f}x")
+        out[f"{name}_vs_layered"] = vs_layered
+        out[f"{name}_vs_switch"] = vs_switch
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small config for CI (~seconds)")
+    ap.add_argument("--tag", default="instances",
+                    help="persist results as BENCH_<tag>.json "
+                    "(smoke runs get a _smoke suffix)")
+    args = ap.parse_args()
+    r = Report()
+    r.header()
+    derived = main(r, smoke=args.smoke)
+    persist(args.tag, r, derived, config=derived.pop("config", None),
+            smoke=args.smoke)

@@ -9,12 +9,16 @@ own vmap group with zero update-path collectives — launch/dryrun.py proves
 that program compiles at 512 chips).
 
 A/B (``--mode``): the sweep runs the layered reference cascade and/or the
-PRODUCTION DEFAULT (fused cascade + lazy layer-0 append) under the same
-``vmap`` — multi-instance fused throughput, the curve ROADMAP's
-"Fused-path follow-ons" asks for.  The default arm is labeled
-``fused_lazy`` because it carries BOTH optimizations; single-knob
-attribution (fused alone, lazy alone) is bench_update_rate's matched-pair
-matrix, not this sweep.
+PRODUCTION DEFAULT (fused cascade + lazy layer-0 append + depth-bucketed
+batched execution) under the same instance batching — multi-instance fused
+throughput, the curve ROADMAP's "Fused-path follow-ons" asks for.  The
+default arm is labeled ``fused_lazy`` because it carries the
+optimizations together; single-knob attribution (fused alone, lazy alone)
+is bench_update_rate's matched-pair matrix, and batch-mode attribution
+(bucketed vs branchfree vs the legacy vmapped switch) is
+bench_instances.py.  ``fused_lazy_switch`` keeps the PRE-fix batched
+``lax.switch`` layout in the sweep so the divergence regression stays
+visible in the BENCH_scaling.json trajectory.
 
 Derived: per-variant aggregate updates/s per instance count, weak-scaling
 overhead vs 1 instance, the default/layered aggregate speedup, and the
@@ -35,7 +39,10 @@ SMOKE = dict(block=512, blocks=4, cuts=(1024, 8192, 65536), scale=14)
 
 VARIANTS = dict(
     layered=dict(fused=False, lazy_l0=False),
-    fused_lazy=dict(fused=True, lazy_l0=True),   # the production default
+    # the production default: divergence-free depth-bucketed batched step
+    fused_lazy=dict(fused=True, lazy_l0=True, batch_mode="bucketed"),
+    # the pre-fix layout: vmapped lax.switch executes every spill depth
+    fused_lazy_switch=dict(fused=True, lazy_l0=True, batch_mode="switch"),
 )
 
 
@@ -48,7 +55,7 @@ def main(report: Report | None = None, mode: str = "both",
     key = jax.random.PRNGKey(0)
 
     if mode == "both":
-        wanted = ["layered", "fused_lazy"]
+        wanted = ["layered", "fused_lazy", "fused_lazy_switch"]
     else:
         wanted = ["layered"] if mode == "layered" else ["fused_lazy"]
 
@@ -85,7 +92,7 @@ def main(report: Report | None = None, mode: str = "both",
         report.add(f"scaling_{name}_projection_34k", 0.0,
                    f"{proj:,.0f} upd/s if linear (paper: 1.9e9)")
         out[name] = dict(rates=rates, projection=proj)
-    if len(wanted) == 2:
+    if mode == "both":
         n_max = max(out["fused_lazy"]["rates"])
         ratio = out["fused_lazy"]["rates"][n_max] \
             / out["layered"]["rates"][n_max]
@@ -94,6 +101,14 @@ def main(report: Report | None = None, mode: str = "both",
                    f"instances = {ratio:.2f}x (single-knob attribution: "
                    f"bench_update_rate)")
         out["fused_lazy_speedup"] = ratio
+        # the divergence fix itself: bucketed vs the pre-fix batched switch
+        div = out["fused_lazy"]["rates"][n_max] \
+            / out["fused_lazy_switch"]["rates"][n_max]
+        report.add("scaling_divergence_fix_speedup", 0.0,
+                   f"fused_lazy/fused_lazy_switch @ {n_max} instances = "
+                   f"{div:.2f}x (batched-switch divergence, "
+                   f"bench_instances.py for the full mode matrix)")
+        out["divergence_fix_speedup"] = div
     return out
 
 

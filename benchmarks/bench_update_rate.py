@@ -51,10 +51,25 @@ def ingest_rate(cuts, block_size, n_blocks, scale=18, seed=0,
     key = jax.random.PRNGKey(seed)
     rows, cols, vals = rmat_stream(key, n_blocks, block_size, scale)
     h0 = hier.create(cuts, block_size)
+    # timed WITHOUT the telemetry outputs ([0] lets XLA dead-code-eliminate
+    # them, as every committed BENCH_update_rate.json row was measured) so
+    # the perf trajectory stays apples-to-apples across PRs
     run = jax.jit(lambda h, r, c, v: stream.ingest(
         h, r, c, v, fused=fused, lazy_l0=lazy_l0, chunk=chunk)[0])
     sec = timeit(run, h0, rows, cols, vals, warmup=1, iters=3)
-    return sec, n_blocks * block_size / sec
+    # spill-rate telemetry (separate untimed call): stream.ingest reports
+    # per-INPUT-block units regardless of ``chunk`` (each update's snapshot
+    # repeated chunk times), so this fraction is comparable across every
+    # variant row — the old per-chunked-step telemetry deflated chunked
+    # spill rates by 1/chunk against the same denominator.
+    _, telem = jax.jit(lambda h, r, c, v: stream.ingest(
+        h, r, c, v, fused=fused, lazy_l0=lazy_l0, chunk=chunk))(
+        h0, rows, cols, vals)
+    assert int(telem["spills"].shape[0]) == n_blocks
+    spills_l0 = float(telem["spills"][-1, 0])
+    updates = n_blocks // max(chunk, 1)   # a spill fires at most once/update
+    frac_l0_spill = spills_l0 / max(updates, 1)
+    return sec, n_blocks * block_size / sec, frac_l0_spill
 
 
 def main(report: Report | None = None, mode: str = "both",
@@ -73,11 +88,14 @@ def main(report: Report | None = None, mode: str = "both",
 
     out = {"config": dict(cfg, smoke=smoke, mode=mode)}
     for name in wanted:
-        sec, rate = ingest_rate(cuts, block, blocks, scale, **VARIANTS[name])
-        report.add(f"update_rate_{name}", sec / blocks, f"{rate:,.0f} upd/s")
+        sec, rate, frac_spill = ingest_rate(cuts, block, blocks, scale,
+                                            **VARIANTS[name])
+        report.add(f"update_rate_{name}", sec / blocks,
+                   f"{rate:,.0f} upd/s; l0 spills/update = {frac_spill:.2f}")
         out[f"rate_{name}"] = rate
+        out[f"l0_spill_per_update_{name}"] = frac_spill
     if mode in ("layered", "both"):
-        sec_f, rate_f = ingest_rate(flat_cuts, block, blocks, scale)
+        sec_f, rate_f, _ = ingest_rate(flat_cuts, block, blocks, scale)
         report.add("update_rate_flat", sec_f / blocks, f"{rate_f:,.0f} upd/s")
         report.add("update_rate_speedup", 0.0,
                    f"hier/flat = {out['rate_layered'] / rate_f:.2f}x")

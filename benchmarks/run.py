@@ -8,6 +8,7 @@ at the repo root — the perf trajectory artifact CI uploads and
 EXPERIMENTS.md §Perf is rendered from (benchmarks/make_experiments.py):
   * bench_update_rate — Fig 2 claim: hierarchical vs flat update rate
   * bench_scaling     — Fig 3: aggregate rate vs instance count (+34k proj)
+  * bench_instances   — batch-mode matrix at I>=8 (divergence-fix A/B)
   * bench_cut_sweep   — §II: cut-value tuning curve
   * bench_kernels     — Pallas kernels vs XLA reference (allclose + rate)
   * roofline          — dry-run cell summary (if results/dryrun exists)
@@ -23,11 +24,11 @@ from benchmarks.common import Report, persist
 def main(tag: str = "full") -> dict:
     report = Report()
     report.header()
-    from benchmarks import (bench_cut_sweep, bench_kernels,
+    from benchmarks import (bench_cut_sweep, bench_instances, bench_kernels,
                             bench_scaling, bench_update_rate, roofline)
     derived = {}
-    for mod in (bench_update_rate, bench_scaling, bench_cut_sweep,
-                bench_kernels, roofline):
+    for mod in (bench_update_rate, bench_scaling, bench_instances,
+                bench_cut_sweep, bench_kernels, roofline):
         name = mod.__name__.rsplit(".", 1)[-1]
         try:
             derived[name] = mod.main(report)

@@ -29,6 +29,13 @@ import numpy as np
 
 _MANIFEST = "manifest.json"
 
+# Leaf names (last path component) that may legitimately be absent from an
+# old checkpoint's manifest: state fields added after the checkpoint format
+# shipped.  restore() falls back to the template value for these ONLY.
+MIGRATED_LEAVES = frozenset({
+    "n_updates_hi",      # PR 3: 64-bit update-counter high word (HierAssoc)
+})
+
 
 def _flatten(tree):
     leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
@@ -96,8 +103,26 @@ def restore(ckpt_dir: str, step: int, template: Any,
 
     leaves = []
     for path, tmpl, shd in zip(paths, flat_t, shard_leaves):
-        info = by_path[path]
-        arr = np.load(os.path.join(d, info["file"]))
+        info = by_path.get(path)
+        if info is None:
+            # Schema migration, allow-listed only: a leaf ADDED to a state
+            # dataclass after the checkpoint was written keeps its template
+            # value (zeros for fresh templates), so old checkpoints restore
+            # losslessly.  Any other missing path still fails hard — a
+            # truncated manifest or renamed leaf must not silently resume
+            # from template state.
+            leaf_name = path.rsplit("/", 1)[-1].lstrip(".")
+            if leaf_name not in MIGRATED_LEAVES:
+                raise KeyError(
+                    f"checkpoint leaf {path!r} missing from manifest and "
+                    f"not a known schema migration {sorted(MIGRATED_LEAVES)}")
+            import warnings
+            warnings.warn(f"[ckpt] migrating old checkpoint: leaf {path!r} "
+                          f"absent from manifest, keeping template value")
+            arr = np.asarray(jax.device_get(tmpl)) \
+                if hasattr(tmpl, "dtype") else tmpl
+        else:
+            arr = np.load(os.path.join(d, info["file"]))
         if hasattr(tmpl, "dtype"):
             arr = arr.astype(tmpl.dtype)
         leaves.append(jax.device_put(arr, shd) if shd is not None

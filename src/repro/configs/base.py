@@ -204,6 +204,12 @@ class D4MConfig:
     lazy_l0: bool = False               # append-buffer layer 0 (see §Perf)
     fused: bool = True                  # single-sort fused spill cascade
     chunk: int = 1                      # stream blocks pre-combined per update
+    # instance-batched execution strategy (stream.ingest_instances):
+    # "bucketed" plans every instance's spill depth and branches once per
+    # step on the deepest; "branchfree" = one masked merge per instance;
+    # "switch" = legacy vmapped lax.switch (executes every branch under
+    # vmap — the divergence A/B baseline, EXPERIMENTS.md §Multi-instance)
+    batch_mode: str = "bucketed"
 
     family: str = dataclasses.field(default="d4m", init=False)
 

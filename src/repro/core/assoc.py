@@ -209,6 +209,27 @@ def merge_many(segments, hi: Array, lo: Array, val: Array, *,
     return _canonicalize(cat_hi, cat_lo, cat_val, out_capacity, sr)
 
 
+def gate_segment(seg: AssocSegment, keep,
+                 sr: Semiring = sr_mod.PLUS_TIMES) -> AssocSegment:
+    """All-or-nothing participation gate for a canonical run.
+
+    With ``keep`` False the segment is blanked to the all-SENTINEL empty run
+    — which is itself canonical, so the kernel path may still treat it as a
+    sorted run; with ``keep`` True it is returned unchanged.  ``keep`` may be
+    a traced scalar: this is the branch-free alternative to selecting runs
+    with ``lax.switch``, which under ``vmap`` lowers to select-over-all-
+    branches and makes every instance execute every spill depth's merge
+    (EXPERIMENTS.md §Multi-instance scaling).  The fused cascade gates each
+    layer's buffer into ONE fixed-shape ``merge_many`` instead.
+    """
+    zero = sr_mod.integer_zero(sr, seg.dtype)
+    return AssocSegment(
+        hi=jnp.where(keep, seg.hi, SENTINEL),
+        lo=jnp.where(keep, seg.lo, SENTINEL),
+        val=jnp.where(keep, seg.val, zero),
+        nnz=jnp.where(keep, seg.nnz, 0).astype(jnp.int32))
+
+
 def clear(seg: AssocSegment, sr: Semiring = sr_mod.PLUS_TIMES) -> AssocSegment:
     return empty(seg.capacity, seg.dtype, sr)
 

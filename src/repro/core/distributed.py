@@ -64,15 +64,22 @@ def sharded_ingest_fn(mesh: Mesh, data_axes: Tuple[str, ...],
                       lazy_l0: bool = False,
                       use_kernel: bool = False,
                       fused: bool = True,
-                      chunk: int = 1):
+                      chunk: int = 1,
+                      batch_mode: str = "bucketed"):
     """Build the distributed ingest step.
 
     States and streams are sharded over ``data_axes`` on their instance
-    (leading) axis; each device scans its own instances — no collectives on
-    the update path, exactly the paper's share-nothing design.  ``fused``
+    (leading) axis; each device runs its own instance group — no collectives
+    on the update path, exactly the paper's share-nothing design.  ``fused``
     (default) runs the single-sort fused spill cascade per instance
     (hier.py) — ``fused=False`` is the layered reference oracle; ``chunk``
     pre-combines that many stream blocks per hierarchy update.
+
+    ``batch_mode`` picks the instance-batched execution strategy
+    (``stream.ingest_instances``): the ``"bucketed"`` default plans every
+    local instance's spill depth and branches ONCE per step on the deepest
+    one — the branch predicate is per-device, so the fix for vmapped
+    branch divergence costs no collectives either.
     """
     spec = P(data_axes)
 
@@ -81,7 +88,8 @@ def sharded_ingest_fn(mesh: Mesh, data_axes: Tuple[str, ...],
     def dist_ingest(states, rows, cols, vals):
         return stream.ingest_instances(states, rows, cols, vals, sr=sr,
                                        use_kernel=use_kernel, lazy_l0=lazy_l0,
-                                       fused=fused, chunk=chunk)
+                                       fused=fused, chunk=chunk,
+                                       batch_mode=batch_mode)
 
     return jax.jit(dist_ingest, donate_argnums=(0,))
 
@@ -120,15 +128,44 @@ def global_degree_histogram_fn(mesh: Mesh, data_axes: Tuple[str, ...],
 
 
 def aggregate_update_counts_fn(mesh: Mesh, data_axes: Tuple[str, ...]):
-    """Total updates ingested across the fleet (throughput accounting)."""
+    """Total updates ingested across the fleet (throughput accounting).
+
+    The paper's fleets count 1.9e9 updates *per second*, so int32 psum
+    arithmetic broke the counter in about one second (wraps at ~2.1e9).
+    int64 is unavailable without ``jax_enable_x64``, so exactness comes
+    from word splitting instead: per device, the uint32 low words are
+    summed with wraparound-carry detection (a wrapping cumsum decreases
+    exactly at the carries) and the resulting 32-bit total is split into
+    16-bit halves whose int32 psums cannot overflow below ~2^15 devices;
+    the 2^32-carry words ride psum directly.  The returned callable
+    reassembles the exact 64-bit total on the host (as a numpy int64), so
+    ``int(fn(states))`` keeps working — now past 2^31 and 2^32.
+    """
     spec = P(data_axes)
 
     @partial(shard_map, mesh=mesh, in_specs=(spec,), out_specs=P(),
              check_vma=False)
-    def count(states):
-        local = jnp.sum(states.n_updates)
+    def count_parts(states):
+        lo = states.n_updates.reshape(-1)           # uint32[I] low words
+        hi = states.n_updates_hi.reshape(-1)        # int32[I]  2^32 carries
+        csum = jnp.cumsum(lo)                       # uint32, wraps
+        carries = jnp.sum((csum[1:] < csum[:-1]).astype(jnp.int32))
+        lo_total = csum[-1]                         # uint32 device total
+        hi_total = jnp.sum(hi) + carries
+        parts = jnp.stack([
+            hi_total,
+            (lo_total >> jnp.uint32(16)).astype(jnp.int32),
+            (lo_total & jnp.uint32(0xFFFF)).astype(jnp.int32)])
         for ax in data_axes:
-            local = jax.lax.psum(local, ax)
-        return local
+            parts = jax.lax.psum(parts, ax)
+        return parts
 
-    return jax.jit(count)
+    jitted = jax.jit(count_parts)
+
+    def count(states):
+        import numpy as np
+        p = np.asarray(jax.device_get(jitted(states)), np.int64)
+        return np.int64((p[0] << np.int64(32)) + (p[1] << np.int64(16))
+                        + p[2])
+
+    return count

@@ -23,6 +23,15 @@ The single-sort fused cascade (``fused=True``) is the production default for
 planned with scalar nnz arithmetic and executed as ONE canonicalization
 (``assoc.merge_many``).  The per-layer pairwise path stays available behind
 ``fused=False`` as the reference oracle (tests/test_fused_cascade.py).
+
+Instance batching: a vmapped ``lax.switch`` lowers to select-over-all-
+branches, so the per-depth branches of the fused cascade would all execute
+for every instance on every step.  ``batch_mode="branchfree"`` executes the
+planned depth with ZERO control flow instead — one fixed-shape masked
+``merge_many`` (``_fused_execute_planned``) whose participating layers are
+gated by ``assoc.gate_segment`` — and ``core.stream.ingest_instances``
+buckets whole instance batches by their max planned depth on top, so the
+common all-append step pays no sort at all (tests/test_batched_ingest.py).
 """
 from __future__ import annotations
 
@@ -57,7 +66,13 @@ class HierAssoc:
     layers: Tuple[AssocSegment, ...]
     spills: Array        # int32[L]  cumulative spill events per layer
     overflow: Array      # int32     unique entries dropped at the last layer
-    n_updates: Array     # int64-ish int32 counter of raw updates ingested
+    # 64-bit raw-update counter as a (hi, lo) word pair: the paper's fleets
+    # ingest 1.9e9 updates/s, so a single int32 counter wraps in about one
+    # second.  int64 is unavailable without jax_enable_x64, so exactness
+    # comes from uint32 wraparound carry detection (``_bump_counter``) —
+    # ``exact_update_count`` reassembles the true total on the host.
+    n_updates: Array     # uint32   low word of the update counter
+    n_updates_hi: Array  # int32    high word (counts 2**32 carries)
     cuts: Tuple[int, ...] = dataclasses.field(metadata=dict(static=True))
 
     @property
@@ -81,9 +96,34 @@ def create(cuts: Tuple[int, ...], block_size: int, dtype=jnp.float32,
         layers=tuple(assoc.empty(c, dtype, sr) for c in caps),
         spills=jnp.zeros((len(cuts),), jnp.int32),
         overflow=jnp.zeros((), jnp.int32),
-        n_updates=jnp.zeros((), jnp.int32),
+        n_updates=jnp.zeros((), jnp.uint32),
+        n_updates_hi=jnp.zeros((), jnp.int32),
         cuts=tuple(cuts),
     )
+
+
+def _bump_counter(lo: Array, hi: Array, n: Array) -> Tuple[Array, Array]:
+    """Add ``n`` raw updates to the (hi, lo) counter words.
+
+    uint32 addition wraps; a wrap happened iff the new low word is smaller
+    than the old one, which carries exactly one 2**32 into the high word.
+    Exact for ANY addend below 2**32 — block counts on the update path,
+    but also a whole instance's low word when elastic rebalance folds two
+    counters.  64-bit-exact counting without int64 (jax_enable_x64 is off
+    by default and flipping it globally changes dtype semantics repo-wide).
+    """
+    new_lo = lo + n.astype(jnp.uint32)
+    new_hi = hi + (new_lo < lo).astype(jnp.int32)
+    return new_lo, new_hi
+
+
+def exact_update_count(h: HierAssoc) -> int:
+    """Host-side exact 64-bit total of the update counter words; sums over
+    any leading instance axes, so it works on vmapped fleet states too."""
+    import numpy as np
+    lo = np.asarray(jax.device_get(h.n_updates), np.int64)
+    hi = np.asarray(jax.device_get(h.n_updates_hi), np.int64)
+    return int(lo.sum() + (hi.sum() << np.int64(32)))
 
 
 def _merge(a, b, cap, sr, use_kernel):
@@ -211,9 +251,137 @@ def _plan_spill_depth(h: HierAssoc, block_slots) -> Array:
     return depth
 
 
+def _fused_execute_planned(h: HierAssoc, rows: Array, cols: Array,
+                           vals: Array, n_live: Array, depth: Array, *,
+                           up_to: int, sr: Semiring, use_kernel: bool,
+                           lazy_l0: bool, may_not_fit: bool = False
+                           ) -> HierAssoc:
+    """Divergence-free fused-cascade executor for a planned block.
+
+    Serves every spill depth in [0, ``up_to``] with ONE fixed-shape
+    ``assoc.merge_many``: layer i's buffer participates iff ``i <= depth``
+    (``assoc.gate_segment`` blanks non-participants to all-sentinel runs,
+    which are still canonical), the canonical result is scattered back to
+    the planned destination layer with ``jnp.where`` selects, and shallower
+    layers are cleared.  No ``lax.switch``/``lax.cond`` anywhere on the data
+    path, so under ``vmap`` each instance pays exactly one merge — the
+    batched switch lowers to select-over-all-branches and charged every
+    instance every depth's merge (EXPERIMENTS.md §Multi-instance scaling).
+
+    ``up_to`` bounds the merge width statically: the depth-bucketed batched
+    ingest (core/stream.py) calls this with ``up_to = max(planned depths)``
+    so a shallow cohort never touches deep-layer buffers; ``up_to = L - 1``
+    is the general single-call form.  ``depth <= up_to`` is the caller's
+    contract.  With ``lazy_l0`` and a depth-0 plan the lazy append is still
+    taken (selected per instance), and when ``up_to == 0`` with a
+    statically-fitting block the merge is skipped entirely — the all-append
+    cohort pays zero sorts.
+
+    ``rows``/``cols``/``vals`` must already be sentinel-masked, compacted
+    and dtype-cast (``_prepare_block``); ``may_not_fit`` marks the one shape
+    (masked block wider than the creation block size) whose append can
+    physically clobber, needing the dynamic fit check.
+    """
+    B = rows.shape[-1]
+    caps = h.capacities
+    L = h.num_layers
+    vdtype = h.layers[0].dtype
+    zero = sr_mod.integer_zero(sr, vdtype)
+    lazy_append = lazy_l0 and B <= h.cuts[0]
+
+    if lazy_append:
+        l0_app, clobbered = _lazy_append(h.layers[0], rows, cols, vals,
+                                         n_live=n_live)
+        fits = (h.layers[0].nnz + B <= caps[0]) if may_not_fit \
+            else jnp.bool_(True)
+        take_append = (depth == 0) & fits
+        if up_to == 0 and not may_not_fit:
+            # whole cohort appends: zero sorts, the LSM fast path.
+            new_layers = (l0_app,) + h.layers[1:]
+            spills = h.spills.at[-1].add(
+                (new_layers[-1].nnz > h.cuts[-1]).astype(jnp.int32))
+            lo, hi = _bump_counter(h.n_updates, h.n_updates_hi, n_live)
+            return dataclasses.replace(
+                h, layers=new_layers, spills=spills,
+                overflow=h.overflow + clobbered,
+                n_updates=lo, n_updates_hi=hi)
+
+    # The ONE masked merge: raw block (+ lazy layer-0 buffer) plus every
+    # gated layer buffer in [first, up_to].
+    if lazy_l0:
+        l0 = h.layers[0]
+        raw = (jnp.concatenate([rows, l0.hi]),
+               jnp.concatenate([cols, l0.lo]),
+               jnp.concatenate([vals, l0.val]))
+        first = 1
+    else:
+        raw = (rows, cols, vals)
+        first = 0
+    runs = tuple(
+        h.layers[i] if i == 0          # depth >= 0 always: no gate needed
+        else assoc.gate_segment(h.layers[i], depth >= i, sr)
+        for i in range(first, up_to + 1))
+    width = raw[0].shape[-1] + sum(caps[first:up_to + 1])
+    seg, _ = assoc.merge_many(runs, *raw, out_capacity=width, sr=sr,
+                              use_kernel=use_kernel)
+    n_unique = seg.nnz
+    cap_d = jnp.asarray(caps[:up_to + 1], jnp.int32)[depth]
+    ovf = jnp.maximum(n_unique - cap_d, 0).astype(jnp.int32)
+
+    new_layers = []
+    for i in range(L):
+        li = h.layers[i]
+        if i > up_to:
+            new_layers.append(li)
+            continue
+        is_dest = depth == jnp.int32(i)
+        consumed = depth > jnp.int32(i)
+        new_layers.append(AssocSegment(
+            hi=jnp.where(is_dest, seg.hi[:caps[i]],
+                         jnp.where(consumed, assoc.SENTINEL, li.hi)),
+            lo=jnp.where(is_dest, seg.lo[:caps[i]],
+                         jnp.where(consumed, assoc.SENTINEL, li.lo)),
+            val=jnp.where(is_dest, seg.val[:caps[i]],
+                          jnp.where(consumed, zero, li.val)),
+            nnz=jnp.where(is_dest, jnp.minimum(n_unique, jnp.int32(caps[i])),
+                          jnp.where(consumed, 0, li.nnz))))
+    if lazy_append:
+        new_layers[0] = AssocSegment(
+            hi=jnp.where(take_append, l0_app.hi, new_layers[0].hi),
+            lo=jnp.where(take_append, l0_app.lo, new_layers[0].lo),
+            val=jnp.where(take_append, l0_app.val, new_layers[0].val),
+            nnz=jnp.where(take_append, l0_app.nnz, new_layers[0].nnz))
+        ovf = jnp.where(take_append, clobbered, ovf)
+    spills = h.spills \
+        + (jnp.arange(L, dtype=jnp.int32) < depth).astype(jnp.int32)
+    spills = spills.at[-1].add(
+        (new_layers[-1].nnz > h.cuts[-1]).astype(jnp.int32))
+    lo, hi = _bump_counter(h.n_updates, h.n_updates_hi, n_live)
+    return dataclasses.replace(
+        h, layers=tuple(new_layers), spills=spills,
+        overflow=h.overflow + ovf, n_updates=lo, n_updates_hi=hi)
+
+
+def _prepare_block(h: HierAssoc, rows: Array, cols: Array, vals: Array,
+                   mask: Array | None, sr: Semiring
+                   ) -> Tuple[Array, Array, Array, Array]:
+    """Shared fused-path prologue: int32/dtype-cast, sentinel-blank masked
+    entries, compact a masked block front-first and return its live-slot
+    count (``sum(mask)`` — the mask-aware occupancy the planner charges)."""
+    vdtype = h.layers[0].dtype
+    rows, cols, vals = assoc.mask_coo(rows, cols, vals.astype(vdtype), mask,
+                                      sr)
+    if mask is None:
+        n_live = jnp.int32(rows.shape[-1])
+    else:
+        n_live = jnp.sum(mask).astype(jnp.int32)
+        rows, cols, vals = _compact_masked(rows, cols, vals, mask)
+    return rows, cols, vals, n_live
+
+
 def _update_fused(h: HierAssoc, rows: Array, cols: Array, vals: Array,
                   mask: Array | None, sr: Semiring, use_kernel: bool,
-                  lazy_l0: bool) -> HierAssoc:
+                  lazy_l0: bool, batch_mode: str = "switch") -> HierAssoc:
     """Single-sort fused spill cascade (tentpole path).
 
     The layered path pays up to L+1 canonicalization sorts per block (block
@@ -226,6 +394,16 @@ def _update_fused(h: HierAssoc, rows: Array, cols: Array, vals: Array,
     a pure append — zero sorts for the common case, the LSM memtable
     discipline fused with the paper's hierarchy.
 
+    ``batch_mode`` picks the execution strategy for the planned depth:
+    ``"switch"`` (default) materializes one ``lax.switch`` branch per depth
+    — optimal single-instance, but a *vmapped* switch lowers to select-over-
+    all-branches, charging every instance every depth's merge.
+    ``"branchfree"`` routes through ``_fused_execute_planned``: one
+    fixed-shape masked merge serves all depths, so the vmapped layout pays
+    one merge per instance.  Instance-batched callers should prefer
+    ``core.stream.ingest_instances(batch_mode="bucketed")``, which
+    additionally skips the merge for all-depth-0 steps.
+
     Masked blocks are planned at their live-slot count ``sum(mask)`` (not
     the block capacity B) and compacted front-first with one O(B) scatter,
     so a sparse block costs only its live entries in occupancy — the old
@@ -233,16 +411,25 @@ def _update_fused(h: HierAssoc, rows: Array, cols: Array, vals: Array,
     """
     B = rows.shape[-1]
     vdtype = h.layers[0].dtype
-    rows, cols, vals = assoc.mask_coo(rows, cols, vals.astype(vdtype), mask,
-                                      sr)
-    if mask is None:
-        n_live = jnp.int32(B)
-    else:
-        n_live = jnp.sum(mask).astype(jnp.int32)
-        rows, cols, vals = _compact_masked(rows, cols, vals, mask)
+    rows, cols, vals, n_live = _prepare_block(h, rows, cols, vals, mask, sr)
     depth = _plan_spill_depth(h, n_live)
     caps = h.capacities
     L = h.num_layers
+
+    # The mask-aware plan admits nnz + n_live <= c_0, but the append
+    # physically writes B slots: only a MASKED block wider than the
+    # creation block_size (B > C_0 - c_0) can reach past capacity and
+    # clobber live entries — for every other shape the plan bound implies
+    # nnz + B <= C_0, so the fit check is statically true and must not be
+    # traced (a vmapped lax.cond executes both branches, which would bolt
+    # a full-width merge onto every no-spill append).
+    append_always_fits = mask is None or B <= caps[0] - h.cuts[0]
+
+    if batch_mode == "branchfree":
+        return _fused_execute_planned(
+            h, rows, cols, vals, n_live, depth, up_to=L - 1, sr=sr,
+            use_kernel=use_kernel, lazy_l0=lazy_l0,
+            may_not_fit=not append_always_fits)
 
     # A block physically wider than c_0 cannot use the append fast path
     # (its fixed-size slice would not fit layer 0) even when the mask-aware
@@ -270,15 +457,6 @@ def _update_fused(h: HierAssoc, rows: Array, cols: Array, vals: Array,
         spills = h.spills.at[:d].add(1) if d else h.spills
         return new_layers, spills, ovf
 
-    # The mask-aware plan admits nnz + n_live <= c_0, but the append
-    # physically writes B slots: only a MASKED block wider than the
-    # creation block_size (B > C_0 - c_0) can reach past capacity and
-    # clobber live entries — for every other shape the plan bound implies
-    # nnz + B <= C_0, so the fit check is statically true and must not be
-    # traced (a vmapped lax.cond executes both branches, which would bolt
-    # a full-width merge onto every no-spill append).
-    append_always_fits = mask is None or B <= caps[0] - h.cuts[0]
-
     def make_branch(d: int):
         def run(_):
             if d == 0 and lazy_append:
@@ -300,12 +478,14 @@ def _update_fused(h: HierAssoc, rows: Array, cols: Array, vals: Array,
     # Pressure flag for the spill-less last layer (same as the layered path).
     spills = spills.at[-1].add(
         (new_layers[-1].nnz > h.cuts[-1]).astype(jnp.int32))
+    lo, hi = _bump_counter(h.n_updates, h.n_updates_hi, n_live)
     return dataclasses.replace(
         h,
         layers=new_layers,
         spills=spills,
         overflow=h.overflow + ovf,
-        n_updates=h.n_updates + n_live,
+        n_updates=lo,
+        n_updates_hi=hi,
     )
 
 
@@ -314,7 +494,8 @@ def update(h: HierAssoc, rows: Array, cols: Array, vals: Array,
            sr: Semiring = sr_mod.PLUS_TIMES,
            use_kernel: bool = False,
            lazy_l0: bool = False,
-           fused: bool = True) -> HierAssoc:
+           fused: bool = True,
+           batch_mode: str = "switch") -> HierAssoc:
     """Block-update: semiring-add a COO block into the hierarchy (Fig 2).
 
     ``lazy_l0=True`` (beyond-paper optimization, EXPERIMENTS.md §Perf):
@@ -332,12 +513,23 @@ def update(h: HierAssoc, rows: Array, cols: Array, vals: Array,
     instead of up to L+1.  ``fused=False`` keeps the per-layer reference
     cascade — the query-equivalent oracle the equivalence suite checks
     against.
+
+    ``batch_mode`` (fused only): ``"switch"`` executes the planned depth as
+    one ``lax.switch`` branch (best single-instance); ``"branchfree"``
+    executes it as one masked fixed-shape merge with no control flow — the
+    divergence-free form a ``vmap`` over instances needs, because a batched
+    switch executes every branch.  Instance-batched ingest should use
+    ``core.stream.ingest_instances(batch_mode="bucketed")``, which adds
+    batch-level depth bucketing on top.
     """
     if lazy_l0 and sr.name != "plus.times":
         raise ValueError("lazy_l0 requires the plus.times semiring")
+    if batch_mode not in ("switch", "branchfree"):
+        raise ValueError(f"batch_mode must be 'switch' or 'branchfree', "
+                         f"got {batch_mode!r}")
     if fused:
         return _update_fused(h, rows, cols, vals, mask, sr, use_kernel,
-                             lazy_l0)
+                             lazy_l0, batch_mode=batch_mode)
     merged, ovf0 = assoc.from_coo(rows, cols, vals, rows.shape[-1], sr,
                                   mask=mask)
     if lazy_l0:
@@ -349,11 +541,13 @@ def update(h: HierAssoc, rows: Array, cols: Array, vals: Array,
         layer0, ovf1 = _merge(h.layers[0], merged, h.layers[0].capacity, sr,
                               use_kernel)
     n_new = rows.shape[-1] if mask is None else jnp.sum(mask)
+    lo, hi = _bump_counter(h.n_updates, h.n_updates_hi, jnp.int32(n_new))
     h = dataclasses.replace(
         h,
         layers=(layer0,) + h.layers[1:],
         overflow=h.overflow + ovf0 + ovf1,
-        n_updates=h.n_updates + jnp.int32(n_new),
+        n_updates=lo,
+        n_updates_hi=hi,
     )
     return _cascade(h, sr, use_kernel, lazy_l0)
 

@@ -13,8 +13,20 @@ single-sort fused spill cascade (core/hier.py); ``fused=False`` selects the
 layered reference path (the equivalence oracle).
 
 Instances: `ingest` is written for one hierarchy and one [T, B] block stream;
-`jax.vmap` maps it over an instances axis, `core.distributed` places instance
-groups on mesh devices.
+the production multi-instance layout is ``ingest_instances``.  Its default
+``batch_mode="bucketed"`` swaps the loop order to ``scan`` over time of a
+BATCHED step: every instance's spill depth is planned first (scalar
+arithmetic), then one batch-level ``lax.switch`` on the *maximum* planned
+depth executes the step — a scalar switch, not a vmapped one, so it really
+branches.  The all-depth-0 cohort (the overwhelmingly common case) runs as a
+pure batched append scatter with zero sorts, and a spilling step runs ONE
+divergence-free masked merge per instance (``hier._fused_execute_planned``)
+sized to the deepest planned layer.  ``batch_mode="branchfree"`` keeps
+vmap-of-scan with the per-instance masked merge; ``batch_mode="switch"`` is
+the legacy vmapped ``lax.switch`` layout, which lowers to select-over-all-
+branches and made the fused win vanish under vmap (EXPERIMENTS.md
+§Multi-instance scaling).  ``core.distributed`` places instance groups on
+devices; all modes stay collective-free on the update path.
 """
 from __future__ import annotations
 
@@ -30,6 +42,44 @@ from repro.core.semiring import Semiring
 
 Array = jax.Array
 
+BATCH_MODES = ("bucketed", "branchfree", "switch")
+
+
+def _chunk_stream(rows: Array, cols: Array, vals: Array, chunk: int,
+                  fused: bool, layer0_headroom: int):
+    """Reshape a [..., T, B] stream to [..., T/chunk, chunk*B]."""
+    T, B = rows.shape[-2], rows.shape[-1]
+    if T % chunk:
+        raise ValueError(f"stream length {T} not divisible by chunk "
+                         f"{chunk}")
+    if not fused and chunk * B > layer0_headroom:
+        raise ValueError(
+            f"chunk*B = {chunk * B} exceeds layer-0 headroom "
+            f"{layer0_headroom}; use fused=True or a "
+            f"hierarchy created with block_size >= {chunk * B}")
+    shape = rows.shape[:-2] + (T // chunk, chunk * B)
+    return rows.reshape(shape), cols.reshape(shape), vals.reshape(shape)
+
+
+def _normalize_chunked_telemetry(telem: dict, chunk: int,
+                                 time_axis: int = 0) -> dict:
+    """Make telemetry comparable across ``chunk`` settings.
+
+    The scan emits one snapshot per hierarchy UPDATE ([T/chunk] entries), so
+    spill-rate curves from a chunk=4 run had 4x fewer points per input block
+    than a chunk=1 run and could not be overlaid.  Normalize the standard
+    keys to per-INPUT-block units (each update's snapshot repeated ``chunk``
+    times — cumulative counters become step functions of the input-block
+    axis, directly comparable) and keep the raw per-update view under
+    ``telem["per_update"]``.  ``time_axis`` is 0 for single-instance
+    telemetry and 1 for the instance-major [I, T, ...] batched layout.
+    """
+    if chunk <= 1:
+        return telem
+    out = {k: jnp.repeat(v, chunk, axis=time_axis) for k, v in telem.items()}
+    out["per_update"] = telem
+    return out
+
 
 def ingest(h: HierAssoc, rows: Array, cols: Array, vals: Array,
            sr: Semiring = sr_mod.PLUS_TIMES,
@@ -37,6 +87,7 @@ def ingest(h: HierAssoc, rows: Array, cols: Array, vals: Array,
            lazy_l0: bool = False,
            fused: bool = True,
            chunk: int = 1,
+           batch_mode: str = "switch",
            ) -> Tuple[HierAssoc, dict]:
     """Scan a [T, B] stream of update blocks into the hierarchy.
 
@@ -46,29 +97,32 @@ def ingest(h: HierAssoc, rows: Array, cols: Array, vals: Array,
     block size, so chunking beyond it requires ``fused=True`` (the fused
     planner provisions any incoming block against the whole cut stack).
 
+    ``batch_mode`` selects the fused execution strategy per update
+    (``"switch"`` default for this single-instance entry point,
+    ``"branchfree"`` for callers that vmap this function directly —
+    ``ingest_instances`` picks for you and additionally offers
+    ``"bucketed"``).
+
     Returns the final state plus per-step telemetry (layer-0 nnz and
     cumulative spill counts) used by the update-rate benchmarks to verify
-    the paper's claim that most updates never touch slow memory.
+    the paper's claim that most updates never touch slow memory.  Telemetry
+    is reported in per-INPUT-block units regardless of ``chunk`` (the raw
+    per-update view rides along under ``telem["per_update"]``), so spill
+    curves from different chunk settings overlay correctly.
     """
+    if batch_mode not in ("switch", "branchfree"):
+        raise ValueError(f"ingest batch_mode must be 'switch' or "
+                         f"'branchfree', got {batch_mode!r}")
     if chunk > 1:
-        T, B = rows.shape[-2], rows.shape[-1]
-        if T % chunk:
-            raise ValueError(f"stream length {T} not divisible by chunk "
-                             f"{chunk}")
-        if not fused and chunk * B > h.layers[0].capacity - h.cuts[0]:
-            raise ValueError(
-                f"chunk*B = {chunk * B} exceeds layer-0 headroom "
-                f"{h.layers[0].capacity - h.cuts[0]}; use fused=True or a "
-                f"hierarchy created with block_size >= {chunk * B}")
-        shape = rows.shape[:-2] + (T // chunk, chunk * B)
-        rows = rows.reshape(shape)
-        cols = cols.reshape(shape)
-        vals = vals.reshape(shape)
+        rows, cols, vals = _chunk_stream(
+            rows, cols, vals, chunk, fused,
+            h.layers[0].capacity - h.cuts[0])
 
     def step(state: HierAssoc, block):
         r, c, v = block
         new_state = hier.update(state, r, c, v, sr=sr, use_kernel=use_kernel,
-                                lazy_l0=lazy_l0, fused=fused)
+                                lazy_l0=lazy_l0, fused=fused,
+                                batch_mode=batch_mode)
         telemetry = dict(
             nnz0=new_state.layers[0].nnz,
             spills=new_state.spills,
@@ -77,7 +131,7 @@ def ingest(h: HierAssoc, rows: Array, cols: Array, vals: Array,
         return new_state, telemetry
 
     final, telem = jax.lax.scan(step, h, (rows, cols, vals))
-    return final, telem
+    return final, _normalize_chunked_telemetry(telem, chunk)
 
 
 def ingest_jit(cuts: Tuple[int, ...], block_size: int, dtype=jnp.float32,
@@ -85,7 +139,8 @@ def ingest_jit(cuts: Tuple[int, ...], block_size: int, dtype=jnp.float32,
                use_kernel: bool = False,
                lazy_l0: bool = False,
                fused: bool = True,
-               chunk: int = 1):
+               chunk: int = 1,
+               batch_mode: str = "switch"):
     """Build a jitted (state, stream) -> (state, telemetry) ingest fn.
 
     ``cuts``/``block_size``/``dtype`` pin the hierarchy geometry the
@@ -109,9 +164,58 @@ def ingest_jit(cuts: Tuple[int, ...], block_size: int, dtype=jnp.float32,
             raise ValueError(f"stream block {rows.shape[-1]} != configured "
                              f"block_size {block_size}")
         return ingest(h, rows, cols, vals, sr=sr, use_kernel=use_kernel,
-                      lazy_l0=lazy_l0, fused=fused, chunk=chunk)
+                      lazy_l0=lazy_l0, fused=fused, chunk=chunk,
+                      batch_mode=batch_mode)
 
     return jax.jit(run)
+
+
+def update_instances(states: HierAssoc, rows: Array, cols: Array, vals: Array,
+                     sr: Semiring = sr_mod.PLUS_TIMES,
+                     use_kernel: bool = False,
+                     lazy_l0: bool = False) -> HierAssoc:
+    """One depth-bucketed fused update of a whole instance batch ([I, B]).
+
+    Plan-then-execute across the batch: every instance's spill depth comes
+    first (vmapped scalar arithmetic over nnz counters — no array data
+    touched), then ONE batch-level ``lax.switch`` on the maximum planned
+    depth runs the step.  The switch predicate is a plain scalar (this
+    function must NOT be called under vmap — it IS the batched layout), so
+    unlike a vmapped switch it really branches:
+
+      * max depth 0 — the common case — executes the pure batched append
+        scatter (zero sorts with ``lazy_l0``; a layer-0-only merge without);
+      * max depth d executes one divergence-free masked merge per instance
+        (``hier._fused_execute_planned``) sized to layers [0, d]; instances
+        planned shallower than d simply gate deeper layers out of their
+        merge, and depth-0 instances keep their append via ``jnp.where``.
+
+    Equivalent per instance to ``hier.update(fused=True)`` — contents,
+    spills, overflow and update counters (tests/test_batched_ingest.py).
+    Zero collectives: under ``shard_map`` the predicate is per-device.
+    """
+    if lazy_l0 and sr.name != "plus.times":
+        raise ValueError("lazy_l0 requires the plus.times semiring")
+    B = rows.shape[-1]
+    L = len(states.cuts)
+    prep = jax.vmap(
+        lambda h, r, c, v: hier._prepare_block(h, r, c, v, None, sr))
+    rows, cols, vals, n_live = prep(states, rows, cols, vals)
+    depths = jax.vmap(hier._plan_spill_depth, in_axes=(0, 0))(states, n_live)
+    dmax = jnp.max(depths)
+
+    def make_branch(d: int):
+        def run(operands):
+            s, dep = operands
+            return jax.vmap(
+                lambda h, r, c, v, dd: hier._fused_execute_planned(
+                    h, r, c, v, jnp.int32(B), dd, up_to=d, sr=sr,
+                    use_kernel=use_kernel, lazy_l0=lazy_l0))(
+                s, rows, cols, vals, dep)
+        return run
+
+    return jax.lax.switch(dmax, [make_branch(d) for d in range(L)],
+                          (states, depths))
 
 
 def ingest_instances(states: HierAssoc, rows: Array, cols: Array, vals: Array,
@@ -119,10 +223,58 @@ def ingest_instances(states: HierAssoc, rows: Array, cols: Array, vals: Array,
                      use_kernel: bool = False,
                      lazy_l0: bool = False,
                      fused: bool = True,
-                     chunk: int = 1):
-    """vmapped ingest: states is an instance-batched HierAssoc pytree and the
-    stream arrays are [I, T, B]."""
-    return jax.vmap(
-        lambda h, r, c, v: ingest(h, r, c, v, sr=sr, use_kernel=use_kernel,
-                                  lazy_l0=lazy_l0, fused=fused, chunk=chunk))(
-        states, rows, cols, vals)
+                     chunk: int = 1,
+                     batch_mode: str = "bucketed"):
+    """Instance-batched ingest: states is an instance-batched HierAssoc
+    pytree and the stream arrays are [I, T, B].
+
+    ``batch_mode`` (fused path only; the layered oracle always vmaps):
+
+      * ``"bucketed"`` (production default) — ``lax.scan`` over time of the
+        depth-bucketed batched step (``update_instances``): the update-path
+        cost of a step is set by the DEEPEST planned spill in the batch,
+        not by the sum over all depths, and the common all-append step pays
+        no sort at all.
+      * ``"branchfree"`` — vmap-of-scan with the per-instance masked merge
+        (one fixed-shape merge per instance per step, no batch bucketing).
+      * ``"switch"`` — the legacy vmapped ``lax.switch`` layout; kept as
+        the A/B baseline because a batched switch executes every branch.
+
+    All modes return identical states and per-instance telemetry
+    ([I, T, ...], per-input-block units under ``chunk``).
+    """
+    if batch_mode not in BATCH_MODES:
+        raise ValueError(f"batch_mode must be one of {BATCH_MODES}, "
+                         f"got {batch_mode!r}")
+    if not fused or batch_mode in ("switch", "branchfree"):
+        return jax.vmap(
+            lambda h, r, c, v: ingest(
+                h, r, c, v, sr=sr, use_kernel=use_kernel, lazy_l0=lazy_l0,
+                fused=fused, chunk=chunk,
+                batch_mode=batch_mode if batch_mode != "bucketed"
+                else "switch"))(states, rows, cols, vals)
+
+    if chunk > 1:
+        rows, cols, vals = _chunk_stream(
+            rows, cols, vals, chunk, fused,
+            int(states.layers[0].hi.shape[-1]) - states.cuts[0])
+    # time-major for the scan: [I, T, B] -> [T, I, B]
+    rows_t = jnp.moveaxis(rows, -2, 0)
+    cols_t = jnp.moveaxis(cols, -2, 0)
+    vals_t = jnp.moveaxis(vals, -2, 0)
+
+    def step(s: HierAssoc, block):
+        r, c, v = block
+        new_s = update_instances(s, r, c, v, sr=sr, use_kernel=use_kernel,
+                                 lazy_l0=lazy_l0)
+        telemetry = dict(
+            nnz0=new_s.layers[0].nnz,
+            spills=new_s.spills,
+            overflow=new_s.overflow,
+        )
+        return new_s, telemetry
+
+    final, telem = jax.lax.scan(step, states, (rows_t, cols_t, vals_t))
+    # back to instance-major [I, T, ...] so every batch_mode agrees
+    telem = {k: jnp.moveaxis(v, 0, 1) for k, v in telem.items()}
+    return final, _normalize_chunked_telemetry(telem, chunk, time_axis=1)

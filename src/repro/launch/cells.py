@@ -405,10 +405,10 @@ def _d4m_cell(arch: str, shape: str, mesh: Mesh, variant: str = "baseline"
                       sds((n_inst, blocks, block), I32),
                       sds((n_inst, blocks, block), F32))
         # full knob set from the config — the dry-run lowers the production
-        # (fused) ingest, not just the layered oracle
+        # (fused, depth-bucketed) ingest, not just the layered oracle
         fn = distributed.sharded_ingest_fn(
             mesh, axes, lazy_l0=cfg.lazy_l0, use_kernel=cfg.use_kernel,
-            fused=cfg.fused, chunk=chunk)
+            fused=cfg.fused, chunk=chunk, batch_mode=cfg.batch_mode)
         lowered = fn.lower(states_abs, *stream_abs)
         updates = n_inst * blocks * block
         # model flops: sort-network + segment-combine per update ~
@@ -419,7 +419,8 @@ def _d4m_cell(arch: str, shape: str, mesh: Mesh, variant: str = "baseline"
                     model_flops=float(updates) * (math.log2(c0) ** 2),
                     dtype=cfg.dtype, variant=variant,
                     fused=cfg.fused, lazy_l0=cfg.lazy_l0,
-                    use_kernel=cfg.use_kernel, chunk=chunk)
+                    use_kernel=cfg.use_kernel, chunk=chunk,
+                    batch_mode=cfg.batch_mode)
         return lowered, meta
     if info["kind"] == "query":
         states_abs = jax.eval_shape(

@@ -40,9 +40,10 @@ def run(args) -> dict:
     lazy_l0 = fused if lazy_arg == "auto" else lazy_arg == "on"
     chunk = getattr(args, "chunk", 1)
     use_kernel = getattr(args, "use_kernel", False)
+    batch_mode = getattr(args, "batch_mode", "bucketed")
     ingest = jax.jit(lambda s, r, c, v: stream.ingest_instances(
         s, r, c, v, fused=fused, lazy_l0=lazy_l0, chunk=chunk,
-        use_kernel=use_kernel))
+        use_kernel=use_kernel, batch_mode=batch_mode))
 
     start_round = 0
     if args.ckpt_dir and args.resume:
@@ -89,9 +90,12 @@ def run(args) -> dict:
         if spill_counts is not None else 0
     frac_fast = 1.0 - spills_l0 / max(args.instances * n_updates_total, 1)
     rate = total_updates / wall if wall else 0.0
+    from repro.core.hier import exact_update_count
     return dict(updates_per_s=rate, total_updates=total_updates,
                 wall_s=wall, frac_blocks_layer0=frac_fast,
-                n_updates_counter=int(jnp.sum(states.n_updates)),
+                # exact 64-bit (hi, lo) reassembly — int32 summing broke
+                # past ~2.1e9 fleet updates (about one paper-second)
+                n_updates_counter=exact_update_count(states),
                 overflow=int(jnp.sum(states.overflow)))
 
 
@@ -120,6 +124,14 @@ def main():
                     "(fused only; must divide blocks/rounds)")
     ap.add_argument("--use-kernel", dest="use_kernel", action="store_true",
                     help="Pallas merge kernels (interpret mode off-TPU)")
+    ap.add_argument("--batch-mode", dest="batch_mode",
+                    choices=("bucketed", "branchfree", "switch"),
+                    default="bucketed",
+                    help="instance-batched execution strategy: bucketed = "
+                    "plan all depths, branch once per step on the deepest "
+                    "(production default); branchfree = one masked merge "
+                    "per instance; switch = legacy vmapped lax.switch "
+                    "(executes every branch — the divergence A/B baseline)")
     args = ap.parse_args()
     out = run(args)
     print(f"sustained {out['updates_per_s']:,.0f} updates/s over "

@@ -62,11 +62,18 @@ def _merge_instance_into(states: HierAssoc, src: int, dst: int,
     for layer in src_state.layers:
         last, ovf = assoc.merge(last, layer, last.capacity, sr)
         overflow = overflow + ovf
+    # fold the (hi, lo) 64-bit counter words: src's high word adds directly,
+    # src's low word goes through the shared wraparound-carry add
+    lo, hi = hier._bump_counter(
+        dst_state.n_updates,
+        dst_state.n_updates_hi + src_state.n_updates_hi,
+        src_state.n_updates)
     merged = dst_state.__class__(
         layers=dst_state.layers[:-1] + (last,),
         spills=dst_state.spills,
         overflow=overflow,
-        n_updates=dst_state.n_updates + src_state.n_updates,
+        n_updates=lo,
+        n_updates_hi=hi,
         cuts=dst_state.cuts)
     return jax.tree.map(
         lambda full, one: full.at[dst].set(one), states, merged)

@@ -1,0 +1,320 @@
+"""Instance-batched ingest equivalence: divergence-free vs legacy layouts.
+
+The production layout runs ~30 instances per node under ``vmap``
+(paper §III), where the fused cascade's per-instance ``lax.switch`` lowers
+to select-over-all-branches — every instance used to execute every spill
+depth's merge.  These tests pin the fix: the depth-bucketed batched step
+(``stream.update_instances``), the per-instance masked merge
+(``hier._fused_execute_planned``), and the legacy vmapped switch must be
+indistinguishable in contents AND telemetry (spills/overflow/counters) per
+instance, including steps that hit heterogeneous spill depths at once,
+masked blocks, and the all-depth-0 append cohort.
+
+Also here: the 64-bit (hi, lo) update-counter words — the paper's 1.9e9
+updates/s wraps an int32 counter in about one second — and the chunked
+telemetry normalization to per-input-block units.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import assoc, distributed, hier, stream
+
+CUTS = (16, 64, 256)
+BLOCK = 8
+
+
+def _instance_streams(seed, n_inst, steps, block, nkeys):
+    rng = np.random.default_rng(seed)
+    R = jnp.asarray(rng.integers(0, nkeys, (n_inst, steps, block)), jnp.int32)
+    C = jnp.asarray(rng.integers(0, nkeys, (n_inst, steps, block)), jnp.int32)
+    V = jnp.asarray(rng.normal(size=(n_inst, steps, block)), jnp.float32)
+    return R, C, V
+
+
+def _stack(states_list):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *states_list)
+
+
+def _inst(states, i):
+    return jax.tree.map(lambda x: x[i], states)
+
+
+def _dense(h, n):
+    return np.asarray(assoc.to_dense(hier.query_all(h), n, n))
+
+
+def _assert_states_equal(a, b, n, per_layer=True):
+    for i in range(a.spills.shape[0]):
+        np.testing.assert_allclose(_dense(_inst(a, i), n),
+                                   _dense(_inst(b, i), n),
+                                   rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(a.spills), np.asarray(b.spills))
+    np.testing.assert_array_equal(np.asarray(a.overflow),
+                                  np.asarray(b.overflow))
+    np.testing.assert_array_equal(np.asarray(a.n_updates),
+                                  np.asarray(b.n_updates))
+    np.testing.assert_array_equal(np.asarray(a.n_updates_hi),
+                                  np.asarray(b.n_updates_hi))
+    if per_layer:
+        # batched states: each layer's nnz is [I], the stack is [L, I]
+        np.testing.assert_array_equal(np.asarray(a.nnz_per_layer()),
+                                      np.asarray(b.nnz_per_layer()))
+
+
+@pytest.mark.parametrize("lazy_l0", [False, True])
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_batched_modes_equivalent(lazy_l0, use_kernel):
+    """bucketed == branchfree == switch (contents AND per-instance
+    telemetry) == layered oracle (contents) on spill-heavy random streams."""
+    n_inst, steps, nkeys = 3, 14, 40
+    R, C, V = _instance_streams(0, n_inst, steps, BLOCK, nkeys)
+    states = distributed.create_instances(n_inst, CUTS, BLOCK)
+
+    outs, telems = {}, {}
+    for mode in stream.BATCH_MODES:
+        f = jax.jit(lambda s, r, c, v, m=mode: stream.ingest_instances(
+            s, r, c, v, use_kernel=use_kernel, lazy_l0=lazy_l0,
+            batch_mode=m))
+        outs[mode], telems[mode] = f(states, R, C, V)
+    layered, _ = stream.ingest_instances(states, R, C, V, fused=False,
+                                         lazy_l0=lazy_l0)
+
+    ref = outs["switch"]
+    assert np.asarray(ref.spills).sum() > 0      # streams actually spill
+    for mode in ("bucketed", "branchfree"):
+        _assert_states_equal(outs[mode], ref, nkeys)
+        for key in ("nnz0", "spills", "overflow"):
+            np.testing.assert_array_equal(
+                np.asarray(telems[mode][key]),
+                np.asarray(telems["switch"][key]), err_msg=f"{mode}:{key}")
+    # the layered oracle agrees on contents and overflow (nnz placement and
+    # spill counts legitimately differ between disciplines)
+    for i in range(n_inst):
+        np.testing.assert_allclose(_dense(_inst(outs["bucketed"], i), nkeys),
+                                   _dense(_inst(layered, i), nkeys),
+                                   rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(outs["bucketed"].overflow),
+                                  np.asarray(layered.overflow))
+    np.testing.assert_array_equal(np.asarray(outs["bucketed"].n_updates),
+                                  np.asarray(layered.n_updates))
+
+
+def test_heterogeneous_depths_in_one_step():
+    """One batched step where the three instances plan depths 0, 1 and 2 —
+    the case a vmapped switch charged L merges for — must match the
+    per-instance switch oracle exactly, per instance."""
+    pre_blocks = (0, 2, 8)      # engineered: next update plans depth 0/1/2
+    states_list = []
+    for k in pre_blocks:
+        h = hier.create(CUTS, BLOCK)
+        for t in range(k):
+            keys = jnp.arange(t * BLOCK, (t + 1) * BLOCK, dtype=jnp.int32)
+            h = hier.update(h, keys, keys, jnp.ones(BLOCK), lazy_l0=True)
+        states_list.append(h)
+    states = _stack(states_list)
+    depths = jax.vmap(hier._plan_spill_depth, in_axes=(0, None))(
+        states, BLOCK)
+    np.testing.assert_array_equal(np.asarray(depths), [0, 1, 2])
+
+    rng = np.random.default_rng(1)
+    r = jnp.asarray(rng.integers(0, 500, (3, BLOCK)), jnp.int32)
+    c = jnp.asarray(rng.integers(0, 500, (3, BLOCK)), jnp.int32)
+    v = jnp.ones((3, BLOCK), jnp.float32)
+
+    batched = stream.update_instances(states, r, c, v, lazy_l0=True)
+    oracle = _stack([
+        hier.update(_inst(states, i), r[i], c[i], v[i], lazy_l0=True,
+                    batch_mode="switch")
+        for i in range(3)])
+    _assert_states_equal(batched, oracle, 500)
+    # layers shallower than each planned depth were really consumed
+    nnz = np.asarray(batched.nnz_per_layer())        # [L, I] after vmap
+    for i, d in enumerate((0, 1, 2)):
+        assert np.all(nnz[:d, i] == 0), (i, d, nnz[:, i])
+
+
+def test_depth0_cohort_pure_append():
+    """All-depth-0 cohort takes the batched append fast path: layer 0
+    advances by raw SLOTS (duplicate keys not combined — proof no merge
+    ran), identically in every batch mode."""
+    n_inst = 4
+    states = distributed.create_instances(n_inst, CUTS, BLOCK)
+    rep = jnp.tile(jnp.asarray([[3, 3, 3, 3, 5, 5, 5, 5]], jnp.int32),
+                   (n_inst, 1))
+    v = jnp.ones((n_inst, BLOCK), jnp.float32)
+
+    out = stream.update_instances(states, rep, rep, v, lazy_l0=True)
+    oracle = _stack([
+        hier.update(_inst(states, i), rep[i], rep[i], v[i], lazy_l0=True,
+                    batch_mode="switch") for i in range(n_inst)])
+    _assert_states_equal(out, oracle, 8)
+    nnz = np.asarray(out.nnz_per_layer())            # [L, I]
+    np.testing.assert_array_equal(nnz[0], np.full(n_inst, BLOCK))
+    assert np.asarray(out.spills).sum() == 0
+    d = _dense(_inst(out, 0), 8)
+    assert d[3, 3] == 4.0 and d[5, 5] == 4.0         # query still combines
+
+
+@pytest.mark.parametrize("lazy_l0", [False, True])
+def test_masked_blocks_branchfree_matches_switch(lazy_l0):
+    """Masked blocks under the divergence-free executor: vmapped branchfree
+    update == per-instance switch oracle, including an all-masked-out
+    instance and the n_updates accounting by sum(mask)."""
+    n_inst, nkeys = 3, 30
+    rng = np.random.default_rng(2)
+    states = distributed.create_instances(n_inst, CUTS, BLOCK)
+    # warm the states unevenly so masked updates meet non-trivial occupancy
+    R0, C0, V0 = _instance_streams(3, n_inst, 6, BLOCK, nkeys)
+    states, _ = stream.ingest_instances(states, R0, C0, V0, lazy_l0=lazy_l0,
+                                        batch_mode="switch")
+    r = jnp.asarray(rng.integers(0, nkeys, (n_inst, BLOCK)), jnp.int32)
+    c = jnp.asarray(rng.integers(0, nkeys, (n_inst, BLOCK)), jnp.int32)
+    v = jnp.ones((n_inst, BLOCK), jnp.float32)
+    m = jnp.asarray([[1, 0, 1, 0, 0, 1, 0, 0],
+                     [0, 0, 0, 0, 0, 0, 0, 0],
+                     [1, 1, 1, 1, 1, 1, 1, 1]], bool)
+
+    vm = jax.vmap(lambda h, rr, cc, vv, mm: hier.update(
+        h, rr, cc, vv, mask=mm, lazy_l0=lazy_l0, batch_mode="branchfree"))
+    batched = vm(states, r, c, v, m)
+    oracle = _stack([
+        hier.update(_inst(states, i), r[i], c[i], v[i], mask=m[i],
+                    lazy_l0=lazy_l0, batch_mode="switch")
+        for i in range(n_inst)])
+    _assert_states_equal(batched, oracle, nkeys)
+    assert int(batched.n_updates[0]) == int(states.n_updates[0]) + 3
+    assert int(batched.n_updates[1]) == int(states.n_updates[1])
+
+
+def test_bucketed_chunked_matches_switch():
+    """chunk>1 under the bucketed layout: same contents/telemetry as the
+    legacy layout at the same chunk, and same final contents as chunk=1."""
+    n_inst, steps, nkeys = 2, 8, 60
+    R, C, V = _instance_streams(4, n_inst, steps, BLOCK, nkeys)
+    states = distributed.create_instances(n_inst, CUTS, BLOCK)
+    b, tb = stream.ingest_instances(states, R, C, V, lazy_l0=True, chunk=2,
+                                    batch_mode="bucketed")
+    s, ts = stream.ingest_instances(states, R, C, V, lazy_l0=True, chunk=2,
+                                    batch_mode="switch")
+    u, _ = stream.ingest_instances(states, R, C, V, lazy_l0=True,
+                                   batch_mode="bucketed")
+    _assert_states_equal(b, s, nkeys)
+    for key in ("nnz0", "spills", "overflow"):
+        np.testing.assert_array_equal(np.asarray(tb[key]),
+                                      np.asarray(ts[key]))
+    for i in range(n_inst):
+        np.testing.assert_allclose(_dense(_inst(b, i), nkeys),
+                                   _dense(_inst(u, i), nkeys),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_sharded_ingest_batch_modes_agree():
+    """distributed.sharded_ingest_fn carries batch_mode; bucketed and
+    switch agree through shard_map (1-device mesh; the 8-device program is
+    tests/test_multidevice.py's job)."""
+    mesh = jax.make_mesh((1,), ("data",))
+    n_inst = 4
+    R, C, V = _instance_streams(5, n_inst, 10, BLOCK, 50)
+    outs = {}
+    for mode in ("bucketed", "switch"):
+        states = distributed.create_instances(n_inst, CUTS, BLOCK)
+        fn = distributed.sharded_ingest_fn(mesh, ("data",), lazy_l0=True,
+                                           batch_mode=mode)
+        outs[mode], _ = fn(states, R, C, V)
+    _assert_states_equal(outs["bucketed"], outs["switch"], 50)
+
+
+def test_update_instances_validates_lazy_semiring():
+    """The bucketed entry point must enforce the same lazy_l0/plus.times
+    restriction hier.update does — the append buffer sum-combines
+    duplicates, which is wrong under any other semiring."""
+    from repro.core import semiring
+    states = distributed.create_instances(2, CUTS, BLOCK)
+    r = jnp.zeros((2, BLOCK), jnp.int32)
+    v = jnp.ones((2, BLOCK), jnp.float32)
+    with pytest.raises(ValueError, match="plus.times"):
+        stream.update_instances(states, r, r, v, sr=semiring.MIN_PLUS,
+                                lazy_l0=True)
+
+
+# ------------------------------------------------------- 64-bit counters ----
+
+
+def test_update_counter_carries_past_2_32():
+    """Per-instance counter: uint32 low word wraps into the high word, so
+    totals stay exact past 2**31 (where the old int32 counter broke) and
+    past 2**32."""
+    h = hier.create(CUTS, BLOCK)
+    h = dataclasses.replace(
+        h, n_updates=jnp.uint32(2 ** 32 - 5))
+    keys = jnp.arange(BLOCK, dtype=jnp.int32)
+    h2 = hier.update(h, keys, keys, jnp.ones(BLOCK), lazy_l0=True)
+    assert int(h2.n_updates) == 3                    # wrapped low word
+    assert int(h2.n_updates_hi) == 1                 # carried
+    assert hier.exact_update_count(h2) == 2 ** 32 + 3
+    # layered path carries identically
+    h3 = hier.update(h, keys, keys, jnp.ones(BLOCK), fused=False)
+    assert hier.exact_update_count(h3) == 2 ** 32 + 3
+
+
+def test_aggregate_update_counts_exact_past_2_31():
+    """Fleet totals: the psum path must be exact where int32 wrapped.  Two
+    instances whose low words sum past 2**32 (plus a high word) reassemble
+    to the exact 64-bit total, and further ingest increments it exactly."""
+    mesh = jax.make_mesh((1,), ("data",))
+    n_inst = 2
+    states = distributed.create_instances(n_inst, CUTS, BLOCK)
+    states = dataclasses.replace(
+        states,
+        n_updates=jnp.asarray([2 ** 31 - 2, 2 ** 31 - 1], jnp.uint32),
+        n_updates_hi=jnp.asarray([1, 0], jnp.int32))
+    expected = (2 ** 32 + 2 ** 31 - 2) + (2 ** 31 - 1)   # > 2**33 - 4
+    count = distributed.aggregate_update_counts_fn(mesh, ("data",))
+    assert int(count(states)) == expected
+    R, C, V = _instance_streams(6, n_inst, 3, BLOCK, 20)
+    fn = distributed.sharded_ingest_fn(mesh, ("data",), lazy_l0=True)
+    states2, _ = fn(states, R, C, V)
+    assert int(count(states2)) == expected + n_inst * 3 * BLOCK
+    assert hier.exact_update_count(states2) == expected + n_inst * 3 * BLOCK
+
+
+# -------------------------------------------------- chunked telemetry -------
+
+
+def test_chunk_telemetry_normalized_to_input_blocks():
+    """chunk>1 telemetry comes back in per-INPUT-block units (length T, each
+    update's snapshot repeated chunk times) with the raw per-update view
+    under telem["per_update"] — so spill curves overlay across chunk
+    settings."""
+    steps, nkeys = 8, 40
+    rng = np.random.default_rng(7)
+    R = jnp.asarray(rng.integers(0, nkeys, (steps, BLOCK)), jnp.int32)
+    C = jnp.asarray(rng.integers(0, nkeys, (steps, BLOCK)), jnp.int32)
+    V = jnp.ones((steps, BLOCK), jnp.float32)
+    h0 = hier.create(CUTS, BLOCK)
+
+    _, t1 = stream.ingest(h0, R, C, V, lazy_l0=True, chunk=1)
+    _, t2 = stream.ingest(h0, R, C, V, lazy_l0=True, chunk=2)
+    assert "per_update" not in t1
+    assert t2["spills"].shape[0] == steps            # per-input-block units
+    assert t2["per_update"]["spills"].shape[0] == steps // 2
+    np.testing.assert_array_equal(
+        np.asarray(t2["spills"]),
+        np.repeat(np.asarray(t2["per_update"]["spills"]), 2, axis=0))
+    # final cumulative telemetry rows line up with the state regardless of
+    # chunking (the last snapshot IS the final state's counters)
+    h1, _ = stream.ingest(h0, R, C, V, lazy_l0=True, chunk=2)
+    np.testing.assert_array_equal(np.asarray(t2["spills"][-1]),
+                                  np.asarray(h1.spills))
+
+    # instance-batched bucketed path: same units
+    states = distributed.create_instances(2, CUTS, BLOCK)
+    Ri = jnp.stack([R, R]); Ci = jnp.stack([C, C]); Vi = jnp.stack([V, V])
+    _, ti = stream.ingest_instances(states, Ri, Ci, Vi, lazy_l0=True,
+                                    chunk=2, batch_mode="bucketed")
+    assert ti["spills"].shape[:2] == (2, steps)
+    assert ti["per_update"]["spills"].shape[:2] == (2, steps // 2)

@@ -69,6 +69,42 @@ def test_checkpoint_midstream_hier_roundtrip(tmp_path):
     assert int(cont_ckpt.n_updates) == steps * block
 
 
+def test_checkpoint_restores_pre_widening_manifest(tmp_path):
+    """Schema migration: a checkpoint written BEFORE a state leaf existed
+    (e.g. the PR 3 ``n_updates_hi`` counter word) must still restore — the
+    missing leaf keeps its template value (zeros) and every saved leaf
+    loads normally, instead of the KeyError that broke resume."""
+    import json
+    h = hier.create((8, 32), 4)
+    h = hier.update(h, jnp.array([1, 2, 3, 1]), jnp.array([0, 1, 2, 0]),
+                    jnp.ones(4))
+    save(str(tmp_path), 3, h)
+    # rewrite the manifest as an old checkpoint: drop the n_updates_hi leaf
+    mpath = os.path.join(str(tmp_path), "step_3", "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    kept = [l for l in manifest["leaves"] if "n_updates_hi" not in l["path"]]
+    assert len(kept) == len(manifest["leaves"]) - 1
+    manifest["leaves"] = kept
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+
+    restored = restore(str(tmp_path), 3, hier.create((8, 32), 4))
+    assert int(restored.n_updates_hi) == 0        # template value
+    assert int(restored.n_updates) == 4           # saved leaves load
+    np.testing.assert_array_equal(
+        np.asarray(hier.query_all(restored).hi),
+        np.asarray(hier.query_all(h).hi))
+
+    # the fallback is allow-listed: any OTHER missing leaf still fails hard
+    # (a truncated manifest must not silently resume from template state)
+    manifest["leaves"] = [l for l in kept if "overflow" not in l["path"]]
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(KeyError, match="overflow"):
+        restore(str(tmp_path), 3, hier.create((8, 32), 4))
+
+
 def test_checkpoint_atomicity_partial_dir_ignored(tmp_path):
     state = dict(w=jnp.ones(3))
     save(str(tmp_path), 1, state)
