@@ -1,0 +1,162 @@
+"""Read-path A/B: serve the LIVE hierarchy vs merge-first baselines.
+
+The write side (PRs 1-3) made ingest fast; this benchmark prices the read
+side the same way.  A single-instance hierarchy is ingested to its
+production steady state (fused + lazy layer 0: a non-empty unsorted append
+buffer on top of canonical deep layers), then a Q-vector of point lookups
+is answered three ways:
+
+  * ``engine``       — repro/query/engine: per-layer lexicographic binary
+                       search + layer-0 raw-scan/canonicalization, no merge
+                       (the live-serving path);
+  * ``query_all``    — ONE full-width merge_many per query batch, then
+                       batched lookups on the merged segment (the only
+                       read path the repo had before this PR);
+  * ``flush_lookup`` — drain the hierarchy per batch (``hier.flush``) and
+                       read its last layer (the "stop the world" answer).
+
+Also timed: the degree-vector analytic (engine layer-wise reductions vs
+reduce_rows over query_all), and the read-while-ingest service loop vs
+the identical ingest schedule with no reads — the acceptance criterion is
+engine > both baselines at Q >= 256 and < 10% ingest interference
+(EXPERIMENTS.md §Query-serving).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Report, persist, timeit
+from repro.core import hier, stream
+from repro.data.powerlaw import instance_streams, rmat_stream
+from repro.query import analytics, engine, service
+
+PROBE = dict(block=2048, blocks=32, cuts=(32768, 262144), scale=18,
+             qs=(64, 256, 1024), instances=4, service_blocks=16,
+             service_rounds=4)
+SMOKE = dict(block=512, blocks=8, cuts=(4096, 32768), scale=14,
+             qs=(64, 256), instances=2, service_blocks=8, service_rounds=4)
+
+
+def _ingested_state(cfg, seed=0):
+    key = jax.random.PRNGKey(seed)
+    rows, cols, vals = rmat_stream(key, cfg["blocks"], cfg["block"],
+                                   cfg["scale"])
+    h0 = hier.create(cfg["cuts"], cfg["block"])
+    h, _ = jax.jit(lambda h, r, c, v: stream.ingest(
+        h, r, c, v, lazy_l0=True))(h0, rows, cols, vals)
+    return jax.block_until_ready(h)
+
+
+def _queries(cfg, q, seed=1):
+    key = jax.random.PRNGKey(seed)
+    n = 1 << cfg["scale"]
+    qr = jax.random.randint(key, (q,), 0, n, jnp.int32)
+    qc = jax.random.randint(jax.random.fold_in(key, 1), (q,), 0, n,
+                            jnp.int32)
+    return qr, qc
+
+
+def point_lookup_ab(report: Report, cfg, out: dict):
+    h = _ingested_state(cfg)
+    arms = dict(
+        engine=jax.jit(lambda h, r, c: engine.point_lookup(h, r, c)),
+        query_all=jax.jit(lambda h, r, c: engine.segment_point_lookup(
+            hier.query_all(h), r, c)),
+        flush_lookup=jax.jit(lambda h, r, c: engine.segment_point_lookup(
+            hier.flush(h).layers[-1], r, c)),
+    )
+    for q in cfg["qs"]:
+        qr, qc = _queries(cfg, q)
+        rates = {}
+        for name, fn in arms.items():
+            sec = timeit(fn, h, qr, qc, warmup=1, iters=3)
+            rates[name] = q / sec
+            report.add(f"query_{name}_q{q}", sec,
+                       f"{q / sec:,.0f} lookups/s @ Q={q}")
+            out[f"rate_{name}_q{q}"] = q / sec
+        for base in ("query_all", "flush_lookup"):
+            ratio = rates["engine"] / rates[base]
+            report.add(f"query_engine_vs_{base}_q{q}", 0.0,
+                       f"engine/{base} = {ratio:.2f}x @ Q={q}")
+            out[f"engine_vs_{base}_q{q}"] = ratio
+
+
+def degrees_ab(report: Report, cfg, out: dict):
+    from repro.core import assoc
+
+    h = _ingested_state(cfg)
+    num_rows = 1 << cfg["scale"]
+    eng = jax.jit(lambda h: analytics.out_degrees(h, num_rows))
+    base = jax.jit(lambda h: assoc.reduce_rows(hier.query_all(h), num_rows))
+    sec_e = timeit(eng, h, warmup=1, iters=3)
+    sec_b = timeit(base, h, warmup=1, iters=3)
+    report.add("degrees_engine", sec_e, f"{num_rows / sec_e:,.0f} rows/s")
+    report.add("degrees_query_all", sec_b, f"{num_rows / sec_b:,.0f} rows/s")
+    report.add("degrees_engine_speedup", 0.0,
+               f"engine/query_all = {sec_b / sec_e:.2f}x")
+    out["degrees_engine_speedup"] = sec_b / sec_e
+
+
+def service_ab(report: Report, cfg, out: dict):
+    from repro.core import distributed
+
+    I = cfg["instances"]
+    key = jax.random.PRNGKey(3)
+    rows, cols, vals = instance_streams(key, I, cfg["service_blocks"],
+                                        cfg["block"], scale=cfg["scale"])
+    q = max(cfg["qs"])
+    qr, qc = _queries(cfg, q, seed=4)
+    kwargs = dict(rounds=cfg["service_rounds"], lazy_l0=True,
+                  analytics_num_rows=1 << cfg["scale"], analytics_k=8)
+
+    states = distributed.create_instances(I, cfg["cuts"], cfg["block"])
+    _, base = service.run_service(states, rows, cols, vals, qr, qc,
+                                  with_queries=False, **kwargs)
+    states = distributed.create_instances(I, cfg["cuts"], cfg["block"])
+    _, inter = service.run_service(states, rows, cols, vals, qr, qc,
+                                   with_queries=True, **kwargs)
+    ratio = inter["updates_per_s"] / base["updates_per_s"] \
+        if base["updates_per_s"] else 0.0
+    report.add("service_ingest_only", 0.0,
+               f"{base['updates_per_s']:,.0f} upd/s")
+    report.add("service_interleaved", 0.0,
+               f"{inter['updates_per_s']:,.0f} upd/s + "
+               f"{inter['queries_per_s']:,.0f} q/s "
+               f"(p50 batch {inter['latency_p50_s'] * 1e3:.2f} ms; "
+               f"analytics {inter['analytics_wall_s']:.2f}s separate)")
+    report.add("service_ingest_ratio", 0.0,
+               f"interleaved/ingest-only = {ratio:.3f} "
+               f"(criterion: >= 0.9)")
+    out.update(service_updates_per_s=inter["updates_per_s"],
+               service_queries_per_s=inter["queries_per_s"],
+               service_latency_p50_s=inter["latency_p50_s"],
+               service_ingest_only_updates_per_s=base["updates_per_s"],
+               service_ingest_ratio=ratio)
+
+
+def main(report: Report | None = None, smoke: bool = False):
+    report = report or Report()
+    cfg = SMOKE if smoke else PROBE
+    out = {"config": dict(cfg, smoke=smoke)}
+    point_lookup_ab(report, cfg, out)
+    degrees_ab(report, cfg, out)
+    service_ab(report, cfg, out)
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small config for CI (~seconds)")
+    ap.add_argument("--tag", default="query",
+                    help="persist results as BENCH_<tag>.json "
+                    "(smoke runs get a _smoke suffix)")
+    args = ap.parse_args()
+    r = Report()
+    r.header()
+    derived = main(r, smoke=args.smoke)
+    persist(args.tag, r, derived, config=derived.pop("config", None),
+            smoke=args.smoke)

@@ -16,6 +16,12 @@ earlier A/B used to conflate with the fusion win.
 
 Derived columns: updates/s, the hier/flat speedup, the matched
 fused/layered speedups, and the all-opts combined speedup.
+
+The MASKED arm (``--mode both``) times sparse blocks (25% live entries
+under a bernoulli mask): the fused planner charges ``sum(mask)`` live
+slots instead of the block capacity (PR 2's mask-aware planning), so its
+win over the layered reference on masked streams is now a timed number in
+BENCH_update_rate.json, not just a test (ROADMAP open item).
 """
 from __future__ import annotations
 
@@ -27,6 +33,8 @@ import jax.numpy as jnp
 from benchmarks.common import Report, persist, timeit
 from repro.core import hier, stream
 from repro.data.powerlaw import rmat_stream
+
+MASK_DENSITY = 0.25  # live fraction of each masked block
 
 # CPU probe config: c0 large enough that layer-0 spills amortize, deep layer
 # big enough that its (rare) merges dominate neither path.
@@ -72,6 +80,32 @@ def ingest_rate(cuts, block_size, n_blocks, scale=18, seed=0,
     return sec, n_blocks * block_size / sec, frac_l0_spill
 
 
+def masked_ingest_rate(cuts, block_size, n_blocks, scale=18, seed=0,
+                       fused=False, lazy_l0=False, density=MASK_DENSITY):
+    """Sustained LIVE updates/s on a masked-block stream (the timed form
+    of the mask-aware planning win — tests/test_fused_cascade.py proves
+    the no-over-spill property, this prices it)."""
+    key = jax.random.PRNGKey(seed)
+    rows, cols, vals = rmat_stream(key, n_blocks, block_size, scale)
+    mask = jax.random.bernoulli(jax.random.fold_in(key, 1), density,
+                                (n_blocks, block_size))
+    h0 = hier.create(cuts, block_size)
+
+    def run(h, r, c, v, m):
+        def step(state, blk):
+            br, bc, bv, bm = blk
+            return hier.update(state, br, bc, bv, mask=bm, fused=fused,
+                               lazy_l0=lazy_l0), ()
+        return jax.lax.scan(step, h, (r, c, v, m))[0]
+
+    jitted = jax.jit(run)
+    sec = timeit(jitted, h0, rows, cols, vals, mask, warmup=1, iters=3)
+    n_live = int(jnp.sum(mask))
+    final = jitted(h0, rows, cols, vals, mask)
+    spills_l0 = float(final.spills[0])
+    return sec, n_live / sec, spills_l0 / n_blocks
+
+
 def main(report: Report | None = None, mode: str = "both",
          smoke: bool = False):
     report = report or Report()
@@ -110,6 +144,22 @@ def main(report: Report | None = None, mode: str = "both",
             report.add(f"update_rate_{key}", 0.0,
                        f"{a}/{b} = {ratio:.2f}x")
             out[key] = ratio
+        # timed masked-block arm: fused plans sum(mask) live slots, the
+        # layered reference pays the full block every time (rates are in
+        # LIVE updates/s so the pair is comparable)
+        for name, fused in (("masked_layered", False), ("masked_fused", True)):
+            sec, rate, spill = masked_ingest_rate(cuts, block, blocks, scale,
+                                                  fused=fused, lazy_l0=True)
+            report.add(f"update_rate_{name}", sec / blocks,
+                       f"{rate:,.0f} live upd/s; l0 spills/update = "
+                       f"{spill:.2f}")
+            out[f"rate_{name}"] = rate
+            out[f"l0_spill_per_update_{name}"] = spill
+        ratio = out["rate_masked_fused"] / out["rate_masked_layered"]
+        report.add("update_rate_masked_speedup", 0.0,
+                   f"masked_fused/masked_layered = {ratio:.2f}x "
+                   f"@ density {MASK_DENSITY}")
+        out["masked_speedup"] = ratio
     return out
 
 

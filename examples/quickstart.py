@@ -8,13 +8,17 @@ Walks the paper's core objects:
      a semiring matrix-vector product;
   3. stream updates through a hierarchical array and watch the spill
      cascade keep most traffic in the fast layer;
-  4. swap the semiring (max.plus) to reuse the same machinery for
+  4. query and analyze the LIVE hierarchy with the streaming engine —
+     batched point lookups, row extraction, degrees and heavy hitters,
+     all without flushing or merging the layers;
+  5. swap the semiring (max.plus) to reuse the same machinery for
      "latest-timestamp" semantics.
 """
 import jax
 import jax.numpy as jnp
 
 from repro.core import assoc, hier, semiring
+from repro.query import analytics, engine
 
 # --- 1. an associative array of network traffic (Fig 1) ---------------------
 # vertices are IPs hashed to ints; A[src, dst] = #packets
@@ -50,7 +54,24 @@ merged = hier.query_all(h)
 print(f"query_all: {int(merged.nnz)} unique edges, "
       f"total weight {float(assoc.total(merged)):.0f}")
 
-# --- 4. same machinery, different semiring ----------------------------------
+# --- 4. serve the LIVE hierarchy (repro/query) ------------------------------
+# the streaming engine answers a whole Q-vector of point lookups in one jit
+# dispatch — per-layer binary search over the sorted runs, no merge — so
+# queries interleave with ingest at any point (launch/query.py runs the
+# full read-while-ingest service loop)
+q_rows, q_cols = r[:3], c[:3]       # keys from the last streamed block
+print("\nbatched live lookups:", hier.lookup(h, q_rows, q_cols))
+row0, truncated = engine.extract_rows(h, jnp.array([3]), num_cols=512)
+print(f"row 3 extract: {int((row0 != 0).sum())} live cols "
+      f"(truncated={int(truncated[0])})")
+totals, hot = analytics.top_k_rows(h, num_rows=512, k=3)
+print("heavy hitters (top-3 rows by weight):",
+      [(int(r), float(t)) for r, t in zip(hot, totals)])
+deg_w = analytics.out_degrees(h, num_rows=512)
+print(f"degree vector: {int((deg_w > 0).sum())} active rows, "
+      f"max weighted out-degree {float(deg_w.max()):.0f}")
+
+# --- 5. same machinery, different semiring ----------------------------------
 ts = jnp.arange(7, dtype=jnp.float32)              # packet timestamps
 A_latest, _ = assoc.from_coo(src, dst, ts, capacity=16,
                              sr=semiring.MAX_PLUS)

@@ -210,6 +210,12 @@ class D4MConfig:
     # "switch" = legacy vmapped lax.switch (executes every branch under
     # vmap — the divergence A/B baseline, EXPERIMENTS.md §Multi-instance)
     batch_mode: str = "bucketed"
+    # --- read path (repro/query: engine + service) ---
+    query_batch: int = 256              # Q-vector width per engine dispatch
+    # layer-0 strategy for queries: "auto" picks raw scan vs one in-dispatch
+    # canonicalization of just the layer-0 buffer by static Q (engine.py)
+    query_l0_mode: str = "auto"
+    queries_per_round: int = 1          # service loop: query batches/round
 
     family: str = dataclasses.field(default="d4m", init=False)
 

@@ -256,11 +256,18 @@ def extract_row(seg: AssocSegment, row) -> Tuple[Array, Array, Array]:
 
 
 def reduce_rows(seg: AssocSegment, num_rows: int,
-                sr: Semiring = sr_mod.PLUS_TIMES) -> Array:
-    """Dense per-row reduction (e.g. out-degrees under plus.times)."""
+                sr: Semiring = sr_mod.PLUS_TIMES,
+                sorted: bool = True) -> Array:
+    """Dense per-row reduction (e.g. out-degrees under plus.times).
+
+    ``sorted=False`` lifts the canonical-form assumption so the same
+    reduction runs over a RAW buffer (the lazy layer-0 append buffer, with
+    unsorted and duplicated keys) — the streaming query engine
+    (repro/query) composes per-layer reductions without merging layers.
+    """
     ids = jnp.where(seg.hi == SENTINEL, num_rows, seg.hi)
     # hi is sorted in canonical form and clipping maps to the max id only.
-    out = sr.segment_add(seg.val, ids, num_rows + 1, sorted=True)
+    out = sr.segment_add(seg.val, ids, num_rows + 1, sorted=sorted)
     return out[:num_rows]
 
 
@@ -272,18 +279,37 @@ def reduce_cols(seg: AssocSegment, num_cols: int,
 
 
 def spmv(seg: AssocSegment, x: Array, num_rows: int,
-         sr: Semiring = sr_mod.PLUS_TIMES) -> Array:
+         sr: Semiring = sr_mod.PLUS_TIMES, sorted: bool = True) -> Array:
     """y = A (.) x under the semiring: y[r] = add_c mul(A[r,c], x[c]).
 
     This is the paper's Fig 1 graph operation (neighbors of a vertex) when x
-    is an indicator vector.
+    is an indicator vector.  ``sorted=False`` admits a RAW buffer (lazy
+    layer-0 append buffer) — see ``reduce_rows``.
     """
     zero = sr_mod.integer_zero(sr, seg.dtype)
     valid = seg.hi != SENTINEL
     gathered = x[jnp.clip(seg.lo, 0, x.shape[0] - 1)]
     prod = jnp.where(valid, sr.mul(seg.val, gathered.astype(seg.dtype)), zero)
     ids = jnp.where(valid, seg.hi, num_rows)
-    return sr.segment_add(prod, ids, num_rows + 1, sorted=True)[:num_rows]
+    return sr.segment_add(prod, ids, num_rows + 1, sorted=sorted)[:num_rows]
+
+
+def spmv_t(seg: AssocSegment, x: Array, num_cols: int,
+           sr: Semiring = sr_mod.PLUS_TIMES) -> Array:
+    """y = A' (.) x under the semiring: y[c] = add_r mul(A[r,c], x[r]).
+
+    The transpose contraction — with ``spmv`` it composes the A'(Ax)
+    correlation step (A'A applied to a vector) WITHOUT materializing A'A
+    or even the merged A: the streaming query engine sums the per-layer
+    contractions.  ``lo`` is the minor sort key, so the segment ids are
+    never sorted — no ``sorted`` knob to get wrong.
+    """
+    zero = sr_mod.integer_zero(sr, seg.dtype)
+    valid = seg.hi != SENTINEL
+    gathered = x[jnp.clip(seg.hi, 0, x.shape[0] - 1)]
+    prod = jnp.where(valid, sr.mul(seg.val, gathered.astype(seg.dtype)), zero)
+    ids = jnp.where(valid, seg.lo, num_cols)
+    return sr.segment_add(prod, ids, num_cols + 1)[:num_cols]
 
 
 def to_dense(seg: AssocSegment, num_rows: int, num_cols: int,

@@ -94,6 +94,57 @@ def sharded_ingest_fn(mesh: Mesh, data_axes: Tuple[str, ...],
     return jax.jit(dist_ingest, donate_argnums=(0,))
 
 
+def _mesh_semiring_combine(sr: Semiring, x: Array, axis_name: str) -> Array:
+    """Mesh reduction matching the semiring's add: psum for plus.times,
+    pmax/pmin for the idempotent tropical semirings (dispatch via
+    ``semiring.reduce_kind``, which raises on unknown semirings)."""
+    op = {"sum": jax.lax.psum, "max": jax.lax.pmax, "min": jax.lax.pmin}
+    return op[sr_mod.reduce_kind(sr)](x, axis_name)
+
+
+def sharded_query_fn(mesh: Mesh, data_axes: Tuple[str, ...],
+                     sr: Semiring = sr_mod.PLUS_TIMES,
+                     use_kernel: bool = False,
+                     l0_mode: str = "auto",
+                     per_instance: bool = False):
+    """Fleet-wide point queries: shard_map fanout + semiring-combine gather.
+
+    The query vector is replicated to every device; each device answers it
+    against its LOCAL instance group with one batched engine dispatch
+    (vmapped ``engine.point_lookup`` — no flush, no merge), then the
+    per-instance hits are semiring-combined, first across the local vmap
+    axis and then across the mesh (psum/pmax/pmin to match ``sr.add``).
+    The result is the value the whole fleet's merged array would hold at
+    each key — the read-path dual of ``sharded_ingest_fn``, and the only
+    collectives in the system stay on the query path, exactly the paper's
+    share-nothing split.
+
+    ``per_instance=True`` skips both combines and returns the [I, Q]
+    per-instance values instead (instance-major, matching the state's
+    leading axis) for callers that post-process per database.
+    """
+    from repro.query import engine
+
+    spec = P(data_axes)
+    out_spec = spec if per_instance else P()
+
+    @partial(shard_map, mesh=mesh, in_specs=(spec, P(), P()),
+             out_specs=out_spec, check_vma=False)
+    def dist_query(states, q_rows, q_cols):
+        local = jax.vmap(
+            lambda h: engine.point_lookup(h, q_rows, q_cols, sr=sr,
+                                          use_kernel=use_kernel,
+                                          l0_mode=l0_mode))(states)
+        if per_instance:
+            return local
+        local = engine.reduce_axis(sr, local, axis=0)
+        for ax in data_axes:
+            local = _mesh_semiring_combine(sr, local, ax)
+        return local
+
+    return jax.jit(dist_query)
+
+
 def global_degree_histogram_fn(mesh: Mesh, data_axes: Tuple[str, ...],
                                num_rows: int, num_bins: int,
                                sr: Semiring = sr_mod.PLUS_TIMES):

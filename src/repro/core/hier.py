@@ -596,8 +596,30 @@ def query_all(h: HierAssoc, sr: Semiring = sr_mod.PLUS_TIMES,
     return acc
 
 
-def lookup(h: HierAssoc, row, col, sr: Semiring = sr_mod.PLUS_TIMES) -> Array:
-    """Point query without materializing the merged array."""
+def lookup(h: HierAssoc, row, col, sr: Semiring = sr_mod.PLUS_TIMES,
+           use_kernel: bool = False) -> Array:
+    """Point query without materializing the merged array.
+
+    ``row``/``col`` may be scalars or [Q] vectors: the batched query
+    engine (repro/query/engine.py) answers the whole vector in one jit
+    dispatch — per-layer lexicographic binary search over the canonical
+    runs plus a raw scan/canonicalization of the layer-0 buffer, so it is
+    correct whether layer 0 is canonical or a lazy append buffer.  The old
+    per-layer O(L*C)-per-query scan survives as ``lookup_layered``, the
+    oracle tests/test_query_engine.py compares against.
+    """
+    from repro.query import engine
+    return engine.lookup(h, row, col, sr=sr, use_kernel=use_kernel)
+
+
+def lookup_layered(h: HierAssoc, row, col,
+                   sr: Semiring = sr_mod.PLUS_TIMES) -> Array:
+    """Reference point query: full per-layer scans, scalar row/col.
+
+    Kept as the engine's oracle (and for lazy layer-0 buffers it is
+    trivially correct: ``assoc.lookup`` under plus.times sums every
+    matching slot, duplicates included).
+    """
     vals = [assoc.lookup(l, row, col, sr) for l in h.layers]
     out = vals[0]
     for v in vals[1:]:

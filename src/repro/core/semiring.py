@@ -92,6 +92,23 @@ def get(name: str) -> Semiring:
             f"unknown semiring {name!r}; available: {sorted(_BY_NAME)}")
 
 
+def reduce_kind(sr: Semiring) -> str:
+    """How ``sr.add`` reduces over an axis: "sum" | "max" | "min".
+
+    The single source of truth for every add-reduction dispatch outside
+    ``segment_add`` (axis reductions, scatter combines, mesh collectives
+    — repro/query/engine.py, core/distributed.py).  Raises on an unknown
+    semiring instead of silently picking a wrong reduction.
+    """
+    if sr.name == "plus.times":
+        return "sum"
+    if sr.name in ("max.plus", "max.min"):
+        return "max"
+    if sr.name == "min.plus":
+        return "min"
+    raise ValueError(f"no add-reduction known for semiring {sr.name!r}")
+
+
 def integer_zero(sr: Semiring, dtype) -> Array:
     """Semiring zero clamped into an integer dtype's range."""
     z = sr.zero

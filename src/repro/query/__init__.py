@@ -1,0 +1,14 @@
+"""Streaming query & analytics engine — the read side of the hierarchy.
+
+``engine``    — batched point/row/range lookups against the LIVE hierarchy
+                (per-layer binary search + raw layer-0 scan, no merge);
+``analytics`` — degrees, heavy hitters, semiring SpMV and the A'A
+                correlation step from per-layer reductions;
+``service``   — the read-while-ingest loop (updates/s next to queries/s).
+
+``core.distributed.sharded_query_fn`` adds the mesh fanout + semiring
+gather across the instance fleet.
+"""
+from repro.query import analytics, engine, service  # noqa: F401
+
+__all__ = ["analytics", "engine", "service"]

@@ -1,0 +1,101 @@
+"""Streaming network analytics over the live hierarchy — paper follow-up
+"Streaming 1.9 Billion Hypersparse Network Updates per Second with D4M"
+(arXiv:1907.04217) computes traffic-matrix statistics (degrees, heavy
+hitters) WHILE the fleet ingests; this module composes those statistics
+from per-layer reductions so the merged array is never materialized:
+
+    stat(merge(layers)) == sr-combine_i stat(layer_i)
+
+which holds for every reduction here because ``sr.add`` across a key's
+per-layer copies is exactly the merge's combine (sum under plus.times;
+max/min are idempotent), and every contraction used (``reduce_rows``,
+``reduce_cols``, ``spmv``, ``spmv_t``) is linear in that sense.  The lazy
+layer-0 append buffer needs no special data path — only the
+``indices_are_sorted`` hint must be dropped (its keys are unsorted and
+duplicated), which ``sorted=False`` does.
+
+All functions are jit-safe and vmap-safe over the instance axis.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import assoc
+from repro.core import semiring as sr_mod
+from repro.core.semiring import Semiring
+
+Array = jax.Array
+
+
+def _layer_combine(sr: Semiring, parts) -> Array:
+    out = parts[0]
+    for p in parts[1:]:
+        out = sr.add(out, p)
+    return out
+
+
+def out_degrees(h, num_rows: int, sr: Semiring = sr_mod.PLUS_TIMES) -> Array:
+    """Per-row totals (weighted out-degrees under plus.times) without
+    merging: layer-wise ``assoc.reduce_rows`` + semiring combine.  Layer 0
+    is reduced as a RAW buffer (sorted=False) so the lazy append
+    discipline — duplicates and all — needs no canonicalization."""
+    parts = [assoc.reduce_rows(h.layers[0], num_rows, sr, sorted=False)]
+    parts += [assoc.reduce_rows(l, num_rows, sr) for l in h.layers[1:]]
+    return _layer_combine(sr, parts)
+
+
+def in_degrees(h, num_cols: int, sr: Semiring = sr_mod.PLUS_TIMES) -> Array:
+    """Per-column totals (weighted in-degrees under plus.times); ``lo`` is
+    the minor key so every layer reduces unsorted."""
+    parts = [assoc.reduce_cols(l, num_cols, sr) for l in h.layers]
+    return _layer_combine(sr, parts)
+
+
+def degree_vectors(h, num_rows: int, num_cols: int,
+                   sr: Semiring = sr_mod.PLUS_TIMES) -> Tuple[Array, Array]:
+    """(out_degrees, in_degrees) — the traffic-matrix row/col statistics of
+    arXiv:1907.04217, one dispatch, no merge."""
+    return out_degrees(h, num_rows, sr), in_degrees(h, num_cols, sr)
+
+
+def top_k_rows(h, num_rows: int, k: int,
+               sr: Semiring = sr_mod.PLUS_TIMES) -> Tuple[Array, Array]:
+    """Heavy hitters: the k rows with the largest semiring row total
+    (top talkers of the network traffic matrix).  Returns (totals, row
+    ids), both [k], ordered descending."""
+    deg = out_degrees(h, num_rows, sr)
+    return jax.lax.top_k(deg, k)
+
+
+def spmv(h, x: Array, num_rows: int,
+         sr: Semiring = sr_mod.PLUS_TIMES) -> Array:
+    """y = A (.) x against the live hierarchy: per-layer ``assoc.spmv``
+    combined with the semiring (exact — ``mul`` distributes over the layer
+    combine: sum of products under plus.times, and max/min are monotone in
+    the matrix argument for the tropical semirings)."""
+    parts = [assoc.spmv(h.layers[0], x, num_rows, sr, sorted=False)]
+    parts += [assoc.spmv(l, x, num_rows, sr) for l in h.layers[1:]]
+    return _layer_combine(sr, parts)
+
+
+def spmv_t(h, x: Array, num_cols: int,
+           sr: Semiring = sr_mod.PLUS_TIMES) -> Array:
+    """y = A' (.) x against the live hierarchy (transpose contraction)."""
+    parts = [assoc.spmv_t(l, x, num_cols, sr) for l in h.layers]
+    return _layer_combine(sr, parts)
+
+
+def ata_correlation(h, x: Array, num_rows: int, num_cols: int,
+                    sr: Semiring = sr_mod.PLUS_TIMES) -> Array:
+    """One A'A correlation step applied to a vector: y = A'(A x).
+
+    A'A is the column-key correlation matrix of D4M's analytic toolbox
+    (shared-neighbor counts when A is an adjacency matrix); applying it
+    through the two-step contraction never forms A'A OR the merged A —
+    both contractions stream over the layers.
+    """
+    u = spmv(h, x, num_rows, sr)
+    return spmv_t(h, u, num_cols, sr)

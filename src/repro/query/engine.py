@@ -1,0 +1,270 @@
+"""Batched query engine over the LIVE hierarchy — the read side of D4M.
+
+"D4M 3.0" (arXiv:1702.03253) frames the associative array as a queryable
+database; this module serves point, row and row-range queries against a
+``hier.HierAssoc`` WITHOUT flushing or merging it:
+
+  * every canonical layer (1..L-1, and layer 0 when it is canonical) is a
+    sorted run, so a Q-vector of point queries is answered with one
+    vectorized lexicographic binary search per layer — O(L * Q * log C)
+    instead of ``query_all``'s full-width O(sum C * log sum C) merge;
+  * layer 0 may be a lazy APPEND buffer (unsorted, duplicated keys —
+    ``hier.update(lazy_l0=True)``); it is served by a masked raw scan for
+    small query batches and by ONE in-dispatch canonicalization of just
+    that buffer (O(C0 log C0), still no cross-layer merge) for large ones
+    (``_l0_runs`` picks; ``l0_mode`` overrides);
+  * per-layer hits are combined with the semiring, which is exact without
+    any dedup: ``add`` across layers is exactly how a merge would have
+    combined a key's duplicates (sum for plus.times; max/min are
+    idempotent).
+
+Everything is jit-safe, static-shape and vmap-safe: ``jax.vmap`` over the
+instance axis gives fleet-batched queries (``distributed.sharded_query_fn``
+adds the mesh fanout + semiring gather).  State is never mutated — queries
+interleave freely with ingest steps (repro/query/service.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import assoc
+from repro.core import semiring as sr_mod
+from repro.core.assoc import SENTINEL, AssocSegment
+from repro.core.semiring import Semiring
+
+Array = jax.Array
+
+# Raw-scan vs canonicalize-first crossover for the layer-0 buffer: the
+# masked scan costs O(Q * C0), one canonicalization + searchsorted costs
+# O(C0 log C0 + Q log C0).  Both Q and C0 are static under jit, so the
+# choice is made at trace time; the factor absorbs the scan's cheaper
+# per-element constant (compare+select vs sort compare-exchange).
+_L0_SCAN_FACTOR = 4
+
+
+def reduce_axis(sr: Semiring, vals: Array, axis: int) -> Array:
+    """Reduce an array of semiring values along ``axis`` with ``sr.add``."""
+    op = {"sum": jnp.sum, "max": jnp.max, "min": jnp.min}
+    return op[sr_mod.reduce_kind(sr)](vals, axis=axis)
+
+
+def searchsorted_pair(seg_hi: Array, seg_lo: Array, q_hi: Array, q_lo: Array
+                      ) -> Array:
+    """Leftmost index p with (seg_hi[p], seg_lo[p]) >= (q_hi, q_lo), per query.
+
+    Vectorized lexicographic lower-bound binary search over one canonical
+    run — int64 is unavailable (x64 off), so the (hi, lo) int32 key pair is
+    compared directly instead of being packed.  O(log C) fori_loop steps,
+    each a [Q]-wide gather + compare; vmap-safe.
+    """
+    C = seg_hi.shape[-1]
+    n_iter = max(int(math.ceil(math.log2(C + 1))), 1)
+    lo_b = jnp.zeros(q_hi.shape, jnp.int32)
+    hi_b = jnp.full(q_hi.shape, C, jnp.int32)
+
+    def body(_, bounds):
+        lo_b, hi_b = bounds
+        mid = (lo_b + hi_b) // 2
+        mid_c = jnp.minimum(mid, C - 1)
+        mh = seg_hi[mid_c]
+        ml = seg_lo[mid_c]
+        less = (mh < q_hi) | ((mh == q_hi) & (ml < q_lo))
+        return (jnp.where(less, mid + 1, lo_b), jnp.where(less, hi_b, mid))
+
+    lo_b, _ = jax.lax.fori_loop(0, n_iter, body, (lo_b, hi_b))
+    return lo_b
+
+
+def segment_point_lookup(seg: AssocSegment, rows: Array, cols: Array,
+                         sr: Semiring = sr_mod.PLUS_TIMES) -> Array:
+    """Point hits against one canonical run via binary search (also the
+    batched lookup the merge-then-read baselines in bench_query use)."""
+    zero = sr_mod.integer_zero(sr, seg.dtype)
+    p = searchsorted_pair(seg.hi, seg.lo, rows, cols)
+    p_c = jnp.minimum(p, seg.capacity - 1)
+    hit = (seg.hi[p_c] == rows) & (seg.lo[p_c] == cols)
+    return jnp.where(hit, seg.val[p_c], zero)
+
+
+def _raw_point(seg: AssocSegment, rows: Array, cols: Array, sr: Semiring
+               ) -> Array:
+    """Point hits against a RAW buffer: [Q, C] masked scan; duplicate keys
+    combine under ``sr.add`` (sum for the lazy plus.times buffer)."""
+    zero = sr_mod.integer_zero(sr, seg.dtype)
+    live = jnp.arange(seg.capacity) < seg.nnz
+    m = (seg.hi[None, :] == rows[:, None]) \
+        & (seg.lo[None, :] == cols[:, None]) & live[None, :]
+    vals = jnp.where(m, seg.val[None, :], zero)
+    return reduce_axis(sr, vals, axis=1)
+
+
+def _l0_runs(h, q: int, sr: Semiring, use_kernel: bool, l0_mode: str
+             ) -> Tuple[Tuple[AssocSegment, ...], AssocSegment | None]:
+    """Split the hierarchy into (sorted runs, raw layer-0 buffer or None).
+
+    Layer 0 is ALWAYS treated as potentially raw — the caller is not
+    required to say whether the hierarchy runs the lazy append discipline
+    (mirrors fused ``query_all``) and a canonical layer 0 is a valid raw
+    buffer.  ``l0_mode``:
+
+      * ``"scan"``  — serve layer 0 by masked raw scan (O(Q * C0));
+      * ``"canon"`` — canonicalize JUST the layer-0 buffer in-dispatch
+        (one O(C0 log C0) sort, no cross-layer merge) and serve it as a
+        sorted run like the others;
+      * ``"auto"``  — pick by static cost: scan for small Q, canon once
+        the scan's Q * C0 work passes the sort's C0 log C0.
+    """
+    l0 = h.layers[0]
+    if l0_mode == "auto":
+        c0 = l0.capacity
+        l0_mode = "scan" if q <= _L0_SCAN_FACTOR * math.log2(c0 + 1) \
+            else "canon"
+    if l0_mode == "scan":
+        return tuple(h.layers[1:]), l0
+    canon, _ = assoc.merge_many((), l0.hi, l0.lo, l0.val,
+                                out_capacity=l0.capacity, sr=sr,
+                                use_kernel=use_kernel)
+    return (canon,) + tuple(h.layers[1:]), None
+
+
+def point_lookup(h, rows, cols, sr: Semiring = sr_mod.PLUS_TIMES,
+                 use_kernel: bool = False, l0_mode: str = "auto") -> Array:
+    """Q-vector point queries against the live hierarchy, one dispatch.
+
+    ``rows``/``cols`` may be scalars or [Q] vectors; returns the semiring
+    value of each key combined across every layer (exactly what
+    ``assoc.lookup(query_all(h), r, c)`` returns, without the merge).
+    """
+    rows = jnp.atleast_1d(jnp.asarray(rows, jnp.int32))
+    cols = jnp.atleast_1d(jnp.asarray(cols, jnp.int32))
+    rows, cols = jnp.broadcast_arrays(rows, cols)   # scalar row + vector col
+    runs, raw = _l0_runs(h, rows.shape[0], sr, use_kernel, l0_mode)
+    zero = sr_mod.integer_zero(sr, h.layers[0].dtype)
+    out = jnp.full(rows.shape, zero)
+    for seg in runs:
+        out = sr.add(out, segment_point_lookup(seg, rows, cols, sr))
+    if raw is not None:
+        out = sr.add(out, _raw_point(raw, rows, cols, sr))
+    return out
+
+
+def lookup(h, row, col, sr: Semiring = sr_mod.PLUS_TIMES,
+           use_kernel: bool = False, l0_mode: str = "auto") -> Array:
+    """Scalar-or-vector point lookup; scalar inputs return a scalar."""
+    scalar = jnp.ndim(row) == 0 and jnp.ndim(col) == 0
+    out = point_lookup(h, row, col, sr=sr, use_kernel=use_kernel,
+                       l0_mode=l0_mode)
+    return out[0] if scalar else out
+
+
+def _row_span(seg: AssocSegment, rows: Array) -> Tuple[Array, Array]:
+    """[start, end) index span of each query row inside one canonical run."""
+    zeros = jnp.zeros_like(rows)
+    s = searchsorted_pair(seg.hi, seg.lo, rows, zeros)
+    e = searchsorted_pair(seg.hi, seg.lo, rows + 1, zeros)
+    return s, e
+
+
+def extract_rows(h, rows, num_cols: int, *,
+                 sr: Semiring = sr_mod.PLUS_TIMES,
+                 width: int | None = None,
+                 use_kernel: bool = False,
+                 l0_mode: str = "auto") -> Tuple[Array, Array]:
+    """Dense row extraction: values[q, c] = merged A[rows[q], c].
+
+    Per canonical layer the row's entries are a CONTIGUOUS span (hi is the
+    major sort key): two binary searches bound it and a fixed ``width``
+    window is gathered and semiring-scattered into the dense output —
+    O(L * Q * (log C + W)) with W = ``width``.  The default width
+    ``min(C, num_cols)`` can never truncate (a canonical run holds at most
+    ``num_cols`` unique entries per row); a smaller width trades exactness
+    for speed and reports dropped entries in the returned ``truncated``
+    count per query.  Entries whose column key is >= ``num_cols`` fall
+    outside the dense view and are EXCLUDED (not clipped into the last
+    column).
+
+    Returns ``(dense [Q, num_cols], truncated int32[Q])``.
+    """
+    rows = jnp.atleast_1d(jnp.asarray(rows, jnp.int32))
+    q = rows.shape[0]
+    vdtype = h.layers[0].dtype
+    zero = sr_mod.integer_zero(sr, vdtype)
+    dense = jnp.full((q, num_cols), zero, vdtype)
+    truncated = jnp.zeros((q,), jnp.int32)
+    qidx = jnp.arange(q)[:, None]
+    kind = sr_mod.reduce_kind(sr)
+
+    def scatter(dense, cc, vv, in_view):
+        # out-of-view writes are routed to column 0 with the semiring zero
+        # payload, a no-op under every combine
+        cc = jnp.where(in_view, cc, 0)
+        vv = jnp.where(in_view, vv, zero)
+        ref = dense.at[qidx, cc]
+        return ref.add(vv) if kind == "sum" \
+            else (ref.max(vv) if kind == "max" else ref.min(vv))
+
+    runs, raw = _l0_runs(h, q, sr, use_kernel, l0_mode)
+    for seg in runs:
+        C = seg.capacity
+        w = min(C, num_cols) if width is None else min(width, C)
+        s, e = _row_span(seg, rows)
+        idx = s[:, None] + jnp.arange(w, dtype=jnp.int32)[None, :]
+        valid = idx < e[:, None]
+        idx_c = jnp.minimum(idx, C - 1)
+        cc = seg.lo[idx_c]
+        vv = seg.val[idx_c]
+        dense = scatter(dense, cc, vv, valid & (cc < num_cols))
+        truncated = truncated + jnp.maximum(e - s - w, 0)
+    if raw is not None:
+        live = jnp.arange(raw.capacity) < raw.nnz
+        m = (raw.hi[None, :] == rows[:, None]) & live[None, :]
+        cc = jnp.broadcast_to(raw.lo[None, :], m.shape)
+        vv = jnp.broadcast_to(raw.val[None, :], m.shape)
+        dense = scatter(dense, cc, vv, m & (cc < num_cols))
+    return dense, truncated
+
+
+def range_total(h, row_lo, row_hi, sr: Semiring = sr_mod.PLUS_TIMES,
+                use_kernel: bool = False, l0_mode: str = "auto") -> Array:
+    """Semiring total of every entry with row key in [row_lo, row_hi).
+
+    Exact without dedup for the same reason as ``point_lookup``: summing a
+    key's per-layer copies is the merge's combine.  plus.times uses one
+    prefix-sum per layer (O(C) once, O(Q) per query after the binary
+    search); the idempotent semirings fall back to a masked [Q, C] reduce
+    (max/min have no subtractive prefix trick).
+    """
+    row_lo = jnp.atleast_1d(jnp.asarray(row_lo, jnp.int32))
+    row_hi = jnp.atleast_1d(jnp.asarray(row_hi, jnp.int32))
+    row_lo, row_hi = jnp.broadcast_arrays(row_lo, row_hi)
+    q = row_lo.shape[0]
+    zero = sr_mod.integer_zero(sr, h.layers[0].dtype)
+    out = jnp.full(row_lo.shape, zero)
+    runs, raw = _l0_runs(h, q, sr, use_kernel, l0_mode)
+    for seg in runs:
+        if sr.name == "plus.times":
+            # canonical sentinel slots hold the zero value: cumsum is safe
+            prefix = jnp.concatenate(
+                [jnp.zeros((1,), seg.dtype), jnp.cumsum(seg.val)])
+            zeros = jnp.zeros_like(row_lo)
+            s = searchsorted_pair(seg.hi, seg.lo, row_lo, zeros)
+            e = searchsorted_pair(seg.hi, seg.lo, row_hi, zeros)
+            out = out + (prefix[e] - prefix[s])
+        else:
+            m = (seg.hi[None, :] >= row_lo[:, None]) \
+                & (seg.hi[None, :] < row_hi[:, None]) \
+                & (seg.hi[None, :] != SENTINEL)
+            out = sr.add(out, reduce_axis(
+                sr, jnp.where(m, seg.val[None, :], zero), axis=1))
+    if raw is not None:
+        live = jnp.arange(raw.capacity) < raw.nnz
+        m = (raw.hi[None, :] >= row_lo[:, None]) \
+            & (raw.hi[None, :] < row_hi[:, None]) \
+            & live[None, :] & (raw.hi[None, :] != SENTINEL)
+        out = sr.add(out, reduce_axis(
+            sr, jnp.where(m, raw.val[None, :], zero), axis=1))
+    return out

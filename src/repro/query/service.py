@@ -1,0 +1,149 @@
+"""Read-while-ingest service loop: serve queries AGAINST the live fleet.
+
+The paper's point in sustaining 1.9B updates/s is to *analyze* streaming
+network data (arXiv:1907.04217) — which means the read path must run while
+the write path streams, without draining the hierarchy.  This module
+interleaves jitted ingest rounds (``stream.ingest_instances`` — the
+production bucketed layout) with jitted query batches (``engine`` point
+lookups and ``analytics`` reductions, vmapped over the local instances)
+and reports both sides of the ledger: sustained updates/s, queries/s and
+per-batch query latency.  Because the engine never mutates or merges
+state, the only coupling between the two paths is the device itself — the
+benchmark criterion is that interleaving costs the ingest rate < 10%
+(BENCH_query.json, EXPERIMENTS.md §Query-serving).
+
+``launch/query.py`` is the CLI driver; ``benchmarks/bench_query.py``
+uses the same loop for the interleaved arm.
+"""
+from __future__ import annotations
+
+import time
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import semiring as sr_mod
+from repro.core import stream
+from repro.core.semiring import Semiring
+from repro.query import analytics, engine
+
+Array = jax.Array
+
+
+def make_ingest_fn(sr: Semiring = sr_mod.PLUS_TIMES, *,
+                   use_kernel: bool = False, lazy_l0: bool = False,
+                   fused: bool = True, chunk: int = 1,
+                   batch_mode: str = "bucketed"):
+    """Jitted (states, [I,T,B] stream) -> states round step (telemetry
+    dropped so XLA can DCE it on the hot path)."""
+    def run(s, r, c, v):
+        return stream.ingest_instances(
+            s, r, c, v, sr=sr, use_kernel=use_kernel, lazy_l0=lazy_l0,
+            fused=fused, chunk=chunk, batch_mode=batch_mode)[0]
+    return jax.jit(run)
+
+
+def make_point_query_fn(sr: Semiring = sr_mod.PLUS_TIMES, *,
+                        use_kernel: bool = False, l0_mode: str = "auto"):
+    """Jitted (states, q_rows [Q], q_cols [Q]) -> values [I, Q]: one
+    engine dispatch answers the whole query vector for every local
+    instance (the vmapped analogue of ``stream.update_instances``)."""
+    def run(s, q_rows, q_cols):
+        return jax.vmap(
+            lambda h: engine.point_lookup(h, q_rows, q_cols, sr=sr,
+                                          use_kernel=use_kernel,
+                                          l0_mode=l0_mode))(s)
+    return jax.jit(run)
+
+
+def make_analytics_fn(num_rows: int, k: int,
+                      sr: Semiring = sr_mod.PLUS_TIMES):
+    """Jitted states -> (top-k totals [I, k], top-k row ids [I, k])."""
+    def run(s):
+        return jax.vmap(
+            lambda h: analytics.top_k_rows(h, num_rows, k, sr=sr))(s)
+    return jax.jit(run)
+
+
+def run_service(states, rows: Array, cols: Array, vals: Array,
+                q_rows: Array, q_cols: Array, *,
+                rounds: int,
+                sr: Semiring = sr_mod.PLUS_TIMES,
+                use_kernel: bool = False, lazy_l0: bool = False,
+                fused: bool = True, chunk: int = 1,
+                batch_mode: str = "bucketed",
+                l0_mode: str = "auto",
+                queries_per_round: int = 1,
+                analytics_num_rows: int = 0, analytics_k: int = 8,
+                with_queries: bool = True) -> Tuple[object, dict]:
+    """Interleave ``rounds`` ingest rounds with query batches.
+
+    ``rows``/``cols``/``vals`` are the full [I, T, B] stream (T must divide
+    by ``rounds``); ``q_rows``/``q_cols`` are [Q] query vectors reissued
+    every batch (fresh keys per batch would re-trace nothing — shapes are
+    static).  ``with_queries=False`` runs the identical ingest schedule
+    with no read path — the ingest-only baseline the <10% interference
+    criterion compares against.  Returns (final states, stats dict).
+    """
+    I, T, B = rows.shape
+    if T % rounds:
+        raise ValueError(f"stream length {T} not divisible by rounds "
+                         f"{rounds}")
+    per = T // rounds
+    ingest = make_ingest_fn(sr, use_kernel=use_kernel, lazy_l0=lazy_l0,
+                            fused=fused, chunk=chunk, batch_mode=batch_mode)
+    query = make_point_query_fn(sr, use_kernel=use_kernel, l0_mode=l0_mode)
+    analytic = (make_analytics_fn(analytics_num_rows, analytics_k, sr)
+                if analytics_num_rows else None)
+
+    # warmup/compile outside the timed region (the service steady state is
+    # what the paper's rates describe, not the first-dispatch compile)
+    states = jax.block_until_ready(
+        ingest(states, rows[:, :per], cols[:, :per], vals[:, :per]))
+    if with_queries:
+        jax.block_until_ready(query(states, q_rows, q_cols))
+        if analytic is not None:
+            jax.block_until_ready(analytic(states))
+
+    ingest_wall = 0.0
+    query_wall = 0.0          # point-lookup batches only
+    analytics_wall = 0.0      # top-k batches, kept separate so queries/s
+    latencies = []            # is the point-lookup rate, not a blend
+    n_queries = 0
+    out = None
+    for rnd in range(1, rounds):
+        sl = slice(rnd * per, (rnd + 1) * per)
+        t0 = time.perf_counter()
+        states = ingest(states, rows[:, sl], cols[:, sl], vals[:, sl])
+        jax.block_until_ready(states)
+        ingest_wall += time.perf_counter() - t0
+        if with_queries:
+            for _ in range(queries_per_round):
+                t0 = time.perf_counter()
+                out = query(states, q_rows, q_cols)
+                jax.block_until_ready(out)
+                dt = time.perf_counter() - t0
+                query_wall += dt
+                latencies.append(dt)
+                n_queries += I * q_rows.shape[0]
+            if analytic is not None:
+                t0 = time.perf_counter()
+                jax.block_until_ready(analytic(states))
+                analytics_wall += time.perf_counter() - t0
+    timed_rounds = rounds - 1
+    n_updates = I * timed_rounds * per * B
+    latencies.sort()
+    stats = dict(
+        updates_per_s=n_updates / ingest_wall if ingest_wall else 0.0,
+        queries_per_s=n_queries / query_wall if query_wall else 0.0,
+        ingest_wall_s=ingest_wall,
+        query_wall_s=query_wall,
+        analytics_wall_s=analytics_wall,
+        n_updates=n_updates,
+        n_queries=n_queries,
+        latency_p50_s=latencies[len(latencies) // 2] if latencies else 0.0,
+        latency_max_s=latencies[-1] if latencies else 0.0,
+        rounds=timed_rounds,
+    )
+    return states, stats

@@ -1,0 +1,416 @@
+"""Oracle suite for the streaming query engine (repro/query).
+
+Every engine result is checked semiring-exactly against the two read
+oracles the repo already trusts:
+
+  * ``query_all`` — ONE merge_many over every layer, then assoc-level
+    lookups/reductions on the merged segment;
+  * flush-then-lookup — drain the hierarchy, then read the last layer.
+
+The knob matrix covers semiring x lazy_l0 x use_kernel x masked blocks
+(the ISSUE 4 acceptance grid), including lazy layer-0 buffers with
+DUPLICATE keys — the case a sorted-run-only engine would get wrong —
+plus read-while-ingest consistency (query after k interleaved steps ==
+drain-then-lookup at the same point) and the sharded fleet query.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import assoc, distributed, hier, semiring, stream
+from repro.query import analytics, engine, service
+
+NKEYS = 48
+
+
+def _stream(seed, steps=24, block=8, nkeys=NKEYS, dup_heavy=False):
+    rng = np.random.default_rng(seed)
+    hi = max(nkeys // 8, 2) if dup_heavy else nkeys
+    R = jnp.asarray(rng.integers(0, hi, (steps, block)), jnp.int32)
+    C = jnp.asarray(rng.integers(0, hi, (steps, block)), jnp.int32)
+    V = jnp.asarray(rng.normal(size=(steps, block)), jnp.float32)
+    return R, C, V
+
+
+def _queries(seed, q=32, nkeys=NKEYS):
+    rng = np.random.default_rng(seed + 999)
+    # include keys guaranteed absent (>= nkeys) so misses are exercised
+    qr = jnp.asarray(rng.integers(0, nkeys + 8, (q,)), jnp.int32)
+    qc = jnp.asarray(rng.integers(0, nkeys + 8, (q,)), jnp.int32)
+    return qr, qc
+
+
+def _ingested(sr, lazy_l0, use_kernel, seed=0, dup_heavy=False,
+              cuts=(16, 64, 512), block=8):
+    R, C, V = _stream(seed, block=block, dup_heavy=dup_heavy)
+    h = hier.create(cuts, block_size=block, sr=sr)
+    h, _ = stream.ingest(h, R, C, V, sr=sr, lazy_l0=lazy_l0,
+                         use_kernel=use_kernel)
+    return h
+
+
+@functools.lru_cache(maxsize=None)
+def _case(sr_name, lazy_l0, use_kernel, dup_heavy=False):
+    """Shared (state, merged oracle) per knob combo.
+
+    Ingesting + merging with ``use_kernel=True`` runs the Pallas merge in
+    interpret mode, which costs ~tens of seconds per COMPILE on the CI
+    box; caching the ingested state and its query_all oracle across the
+    parametrized tests keeps the suite's wall time dominated by the
+    engine paths actually under test.
+    """
+    sr = semiring.get(sr_name)
+    h = _ingested(sr, lazy_l0, use_kernel, seed=0, dup_heavy=dup_heavy)
+    merged = hier.query_all(h, sr, use_kernel=use_kernel, lazy_l0=lazy_l0)
+    return h, merged
+
+
+@functools.lru_cache(maxsize=None)
+def _case_flushed(sr_name, lazy_l0, use_kernel):
+    sr = semiring.get(sr_name)
+    h, _ = _case(sr_name, lazy_l0, use_kernel)
+    return hier.flush(h, sr, use_kernel=use_kernel, lazy_l0=lazy_l0)
+
+
+KNOBS = [
+    (semiring.PLUS_TIMES, False, False),
+    (semiring.PLUS_TIMES, True, False),
+    (semiring.PLUS_TIMES, True, True),
+    (semiring.PLUS_TIMES, False, True),
+    (semiring.MAX_PLUS, False, False),
+    (semiring.MIN_PLUS, False, False),
+    (semiring.MAX_MIN, False, True),
+]
+KNOB_IDS = [f"{s.name}-lazy{int(l)}-kern{int(k)}" for s, l, k in KNOBS]
+
+
+@pytest.mark.parametrize("sr,lazy_l0,use_kernel", KNOBS, ids=KNOB_IDS)
+@pytest.mark.parametrize("l0_mode", ["scan", "canon"])
+def test_point_lookup_matches_query_all(sr, lazy_l0, use_kernel, l0_mode):
+    h, merged = _case(sr.name, lazy_l0, use_kernel, dup_heavy=lazy_l0)
+    qr, qc = _queries(1)
+    got = jax.jit(lambda h, r, c: engine.point_lookup(
+        h, r, c, sr=sr, use_kernel=use_kernel, l0_mode=l0_mode))(h, qr, qc)
+    want = jnp.stack([assoc.lookup(merged, r, c, sr)
+                      for r, c in zip(qr, qc)])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("sr,lazy_l0,use_kernel", KNOBS, ids=KNOB_IDS)
+def test_point_lookup_matches_flush_then_lookup(sr, lazy_l0, use_kernel):
+    h, _ = _case(sr.name, lazy_l0, use_kernel)
+    qr, qc = _queries(2)
+    got = engine.point_lookup(h, qr, qc, sr=sr, use_kernel=use_kernel)
+    flushed = _case_flushed(sr.name, lazy_l0, use_kernel)
+    want = jnp.stack([assoc.lookup(flushed.layers[-1], r, c, sr)
+                      for r, c in zip(qr, qc)])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_lazy_buffer_duplicate_keys_sum_exactly():
+    """The case a sorted-run engine gets wrong: the SAME key appended many
+    times into the lazy layer-0 buffer must sum across its duplicates."""
+    h = hier.create((64, 256), block_size=4)
+    for i in range(5):  # no spill: all five blocks live in the raw buffer
+        h = hier.update(h, jnp.full((4,), 3, jnp.int32),
+                        jnp.full((4,), 7, jnp.int32),
+                        jnp.full((4,), 1.0), lazy_l0=True)
+    assert int(h.spills.sum()) == 0          # really still in the buffer
+    for mode in ("scan", "canon"):
+        got = engine.point_lookup(h, jnp.array([3]), jnp.array([7]),
+                                  l0_mode=mode)
+        assert float(got[0]) == 20.0
+    # and the batched hier.lookup front door agrees with the old loop
+    assert float(hier.lookup(h, 3, 7)) == 20.0
+    assert float(hier.lookup_layered(h, 3, 7)) == 20.0
+
+
+@pytest.mark.parametrize("sr,lazy_l0,use_kernel", KNOBS, ids=KNOB_IDS)
+def test_hier_lookup_vector_matches_layered_oracle(sr, lazy_l0, use_kernel):
+    """Satellite: hier.lookup is now the batched engine (accepts vectors);
+    the old per-layer loop is the oracle."""
+    h, _ = _case(sr.name, lazy_l0, use_kernel)
+    qr, qc = _queries(3, q=17)
+    got = jax.jit(lambda h, r, c: hier.lookup(h, r, c, sr=sr))(h, qr, qc)
+    want = jnp.stack([hier.lookup_layered(h, r, c, sr)
+                      for r, c in zip(qr, qc)])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+    # scalar in -> scalar out (old call shape keeps working)
+    s = hier.lookup(h, int(qr[0]), int(qc[0]), sr=sr)
+    assert s.shape == ()
+    np.testing.assert_allclose(float(s), float(want[0]), rtol=1e-5,
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("sr,lazy_l0,use_kernel", KNOBS, ids=KNOB_IDS)
+def test_extract_rows_matches_query_all(sr, lazy_l0, use_kernel):
+    h, merged = _case(sr.name, lazy_l0, use_kernel)
+    dense_oracle = np.asarray(assoc.to_dense(merged, NKEYS, NKEYS, sr))
+    rows_q = jnp.asarray([0, 5, 11, 46, 3], jnp.int32)
+    got, trunc = jax.jit(lambda h, r: engine.extract_rows(
+        h, r, NKEYS, sr=sr, use_kernel=use_kernel))(h, rows_q)
+    np.testing.assert_allclose(np.asarray(got),
+                               dense_oracle[np.asarray(rows_q)],
+                               rtol=1e-5, atol=1e-6)
+    assert int(trunc.sum()) == 0   # default width can never truncate
+
+
+def test_extract_rows_excludes_out_of_view_cols():
+    """Column keys >= num_cols fall outside the dense view and must be
+    DROPPED — not clipped into the last column (both layer paths)."""
+    for lazy in (False, True):
+        h = hier.create((16, 64), block_size=4)
+        h = hier.update(h, jnp.array([1, 1, 1, 1], jnp.int32),
+                        jnp.array([0, 3, 9, 600], jnp.int32),
+                        jnp.ones((4,)), lazy_l0=lazy)
+        dense, trunc = engine.extract_rows(h, jnp.array([1]), num_cols=8)
+        assert float(dense[0, 0]) == 1.0 and float(dense[0, 3]) == 1.0
+        assert float(dense.sum()) == 2.0, f"lazy={lazy}: cols 9/600 leaked"
+        assert float(dense[0, 7]) == 0.0
+        assert int(trunc[0]) == 0
+
+
+def test_point_lookup_broadcasts_scalar_against_vector():
+    h = hier.create((16, 64), block_size=4)
+    h = hier.update(h, jnp.full((4,), 3, jnp.int32),
+                    jnp.array([7, 8, 9, 9], jnp.int32), jnp.ones((4,)))
+    got = hier.lookup(h, 3, jnp.array([7, 9, 99], jnp.int32))
+    assert got.shape == (3,)
+    np.testing.assert_allclose(np.asarray(got), [1.0, 2.0, 0.0])
+
+
+def test_extract_rows_truncation_is_counted():
+    """A too-small window must REPORT dropped entries, not lie."""
+    h = hier.create((4, 16, 128), block_size=8)
+    # one hot row with 8 distinct cols, pushed into deeper layers
+    for i in range(6):
+        cols = jnp.arange(8, dtype=jnp.int32) + 8 * (i % 2)
+        h = hier.update(h, jnp.zeros((8,), jnp.int32), cols, jnp.ones((8,)))
+    got, trunc = engine.extract_rows(h, jnp.array([0]), 32, width=2)
+    assert int(trunc[0]) > 0
+    full, trunc_full = engine.extract_rows(h, jnp.array([0]), 32)
+    assert int(trunc_full[0]) == 0
+    assert float(full.sum()) == 48.0
+
+
+@pytest.mark.parametrize("sr,lazy_l0,use_kernel", KNOBS, ids=KNOB_IDS)
+def test_range_total_matches_query_all(sr, lazy_l0, use_kernel):
+    h, merged = _case(sr.name, lazy_l0, use_kernel)
+    lo = jnp.asarray([0, 12, 30, 7], jnp.int32)
+    hi_ = jnp.asarray([12, 30, NKEYS, 9], jnp.int32)
+    got = jax.jit(lambda h, a, b: engine.range_total(
+        h, a, b, sr=sr, use_kernel=use_kernel))(h, lo, hi_)
+    zero = float(semiring.integer_zero(sr, jnp.float32))
+    valid = np.asarray(merged.hi) != assoc.SENTINEL
+    for i in range(lo.shape[0]):
+        m = valid & (np.asarray(merged.hi) >= int(lo[i])) \
+            & (np.asarray(merged.hi) < int(hi_[i]))
+        vals = np.asarray(merged.val)[m]
+        if sr.name == "plus.times":
+            want = vals.sum()
+        elif vals.size == 0:
+            want = zero
+        elif sr.name in ("max.plus", "max.min"):
+            want = vals.max()
+        else:
+            want = vals.min()
+        np.testing.assert_allclose(float(got[i]), float(want), rtol=1e-4,
+                                   atol=1e-5)
+
+
+@pytest.mark.parametrize("sr,lazy_l0,use_kernel", KNOBS, ids=KNOB_IDS)
+def test_degrees_and_spmv_match_query_all(sr, lazy_l0, use_kernel):
+    h, merged = _case(sr.name, lazy_l0, use_kernel, dup_heavy=lazy_l0)
+    out_deg = jax.jit(lambda h: analytics.out_degrees(h, NKEYS, sr=sr))(h)
+    np.testing.assert_allclose(
+        np.asarray(out_deg), np.asarray(assoc.reduce_rows(merged, NKEYS, sr)),
+        rtol=1e-5, atol=1e-6)
+    in_deg = jax.jit(lambda h: analytics.in_degrees(h, NKEYS, sr=sr))(h)
+    np.testing.assert_allclose(
+        np.asarray(in_deg), np.asarray(assoc.reduce_cols(merged, NKEYS, sr)),
+        rtol=1e-5, atol=1e-6)
+    x = jnp.asarray(np.random.default_rng(6).normal(size=(NKEYS,)),
+                    jnp.float32)
+    y = jax.jit(lambda h, x: analytics.spmv(h, x, NKEYS, sr=sr))(h, x)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(assoc.spmv(merged, x, NKEYS, sr)),
+        rtol=1e-4, atol=1e-5)
+
+
+def test_ata_correlation_matches_merged_two_step():
+    h, merged = _case("plus.times", True, False)
+    x = jnp.asarray(np.random.default_rng(7).normal(size=(NKEYS,)),
+                    jnp.float32)
+    got = jax.jit(lambda h, x: analytics.ata_correlation(
+        h, x, NKEYS, NKEYS))(h, x)
+    want = assoc.spmv_t(merged, assoc.spmv(merged, x, NKEYS), NKEYS)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_top_k_rows_are_the_heavy_hitters():
+    h, merged = _case("plus.times", True, False, dup_heavy=True)
+    deg = np.asarray(assoc.reduce_rows(merged, NKEYS))
+    totals, ids = analytics.top_k_rows(h, NKEYS, 4)
+    order = np.argsort(-deg, kind="stable")[:4]
+    np.testing.assert_allclose(np.asarray(totals), deg[order], rtol=1e-5)
+    assert set(int(i) for i in ids) == set(int(i) for i in order) \
+        or np.allclose(deg[np.asarray(ids)], deg[order], rtol=1e-5)
+
+
+def test_masked_blocks_in_all_knobs():
+    """Masked-block ingest then engine reads: mask-aware planning keeps
+    sparse blocks cheap on the write side; the read side must agree with
+    the oracle regardless."""
+    rng = np.random.default_rng(9)
+    for sr, lazy_l0, use_kernel in KNOBS:
+        h = hier.create((16, 64, 512), block_size=8, sr=sr)
+        step = jax.jit(lambda h, r, c, v, m, sr=sr, lazy=lazy_l0,
+                       uk=use_kernel: hier.update(
+                           h, r, c, v, mask=m, sr=sr, lazy_l0=lazy,
+                           use_kernel=uk))
+        for t in range(20):
+            R = jnp.asarray(rng.integers(0, NKEYS, (8,)), jnp.int32)
+            C = jnp.asarray(rng.integers(0, NKEYS, (8,)), jnp.int32)
+            V = jnp.asarray(rng.normal(size=(8,)), jnp.float32)
+            mask = jnp.asarray(rng.integers(0, 2, (8,)), bool)
+            h = step(h, R, C, V, mask)
+        merged = hier.query_all(h, sr, use_kernel=use_kernel,
+                                lazy_l0=lazy_l0)
+        qr, qc = _queries(9, q=24)
+        got = engine.point_lookup(h, qr, qc, sr=sr, use_kernel=use_kernel)
+        want = jnp.stack([assoc.lookup(merged, r, c, sr)
+                          for r, c in zip(qr, qc)])
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6,
+            err_msg=f"{sr.name} lazy={lazy_l0} kernel={use_kernel}")
+        deg = analytics.out_degrees(h, NKEYS, sr=sr)
+        np.testing.assert_allclose(
+            np.asarray(deg),
+            np.asarray(assoc.reduce_rows(merged, NKEYS, sr)),
+            rtol=1e-5, atol=1e-6)
+
+
+def test_read_while_ingest_consistency():
+    """Query after k interleaved steps == drain-then-lookup at step k, for
+    every k — the engine serves the live state, not a stale snapshot."""
+    R, C, V = _stream(10, steps=12, block=8)
+    h = hier.create((16, 64, 512), block_size=8)
+    qr, qc = _queries(10, q=16)
+    qfn = jax.jit(lambda h, r, c: engine.point_lookup(h, r, c))
+    for k in range(12):
+        h = hier.update(h, R[k], C[k], V[k], lazy_l0=True)
+        got = qfn(h, qr, qc)
+        drained = hier.flush(h, lazy_l0=True)
+        want = jnp.stack([assoc.lookup(drained.layers[-1], r, c)
+                          for r, c in zip(qr, qc)])
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6, err_msg=f"k={k}")
+
+
+def test_service_loop_runs_and_answers():
+    """End-to-end service smoke: interleaved loop returns live answers and
+    both rates; final state equals straight-line ingest."""
+    I, T, B = 2, 8, 8
+    rng = np.random.default_rng(11)
+    rows = jnp.asarray(rng.integers(0, NKEYS, (I, T, B)), jnp.int32)
+    cols = jnp.asarray(rng.integers(0, NKEYS, (I, T, B)), jnp.int32)
+    vals = jnp.ones((I, T, B), jnp.float32)
+    qr, qc = _queries(11, q=8)
+    states = distributed.create_instances(I, (16, 64, 512), block_size=B)
+    final, stats = service.run_service(
+        states, rows, cols, vals, qr, qc, rounds=4, lazy_l0=True,
+        analytics_num_rows=NKEYS, analytics_k=4)
+    assert stats["n_updates"] == I * 3 * (T // 4) * B  # warmup round untimed
+    assert stats["n_queries"] == I * 3 * 8
+    assert stats["updates_per_s"] > 0 and stats["queries_per_s"] > 0
+    # the interleaved reads did not perturb the write path
+    states_ref = distributed.create_instances(I, (16, 64, 512), block_size=B)
+    ref, _ = stream.ingest_instances(states_ref, rows, cols, vals,
+                                     lazy_l0=True)
+    for i in range(I):
+        a = jax.tree.map(lambda x: x[i], final)
+        b = jax.tree.map(lambda x: x[i], ref)
+        np.testing.assert_allclose(
+            np.asarray(assoc.to_dense(hier.query_all(a), NKEYS, NKEYS)),
+            np.asarray(assoc.to_dense(hier.query_all(b), NKEYS, NKEYS)),
+            rtol=1e-5, atol=1e-6)
+
+
+def test_sharded_query_fn_matches_per_instance_oracle():
+    """Fleet query: shard_map fanout + semiring gather == combining every
+    instance's merged-array lookups by hand."""
+    mesh = jax.make_mesh((1,), ("data",))
+    I = 4
+    rng = np.random.default_rng(12)
+    rows = jnp.asarray(rng.integers(0, NKEYS, (I, 10, 8)), jnp.int32)
+    cols = jnp.asarray(rng.integers(0, NKEYS, (I, 10, 8)), jnp.int32)
+    vals = jnp.asarray(rng.normal(size=(I, 10, 8)), jnp.float32)
+    states = distributed.create_instances(I, (16, 64, 512), block_size=8)
+    states, _ = stream.ingest_instances(states, rows, cols, vals,
+                                        lazy_l0=True)
+    qr, qc = _queries(12, q=16)
+    got = distributed.sharded_query_fn(mesh, ("data",))(states, qr, qc)
+    want = np.zeros(16)
+    for i in range(I):
+        h = jax.tree.map(lambda x: x[i], states)
+        merged = hier.query_all(h)
+        want += np.asarray(jnp.stack(
+            [assoc.lookup(merged, r, c) for r, c in zip(qr, qc)]))
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-5)
+    # per-instance form: no combine, instance-major
+    per = distributed.sharded_query_fn(mesh, ("data",),
+                                       per_instance=True)(states, qr, qc)
+    assert per.shape == (I, 16)
+    np.testing.assert_allclose(np.asarray(per).sum(axis=0), want,
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_sharded_query_fn_idempotent_semiring():
+    mesh = jax.make_mesh((1,), ("data",))
+    sr = semiring.MAX_PLUS
+    I = 2
+    rng = np.random.default_rng(13)
+    rows = jnp.asarray(rng.integers(0, 16, (I, 6, 4)), jnp.int32)
+    cols = jnp.asarray(rng.integers(0, 16, (I, 6, 4)), jnp.int32)
+    vals = jnp.asarray(rng.normal(size=(I, 6, 4)), jnp.float32)
+    states = distributed.create_instances(I, (8, 64), block_size=4, sr=sr)
+    states, _ = stream.ingest_instances(states, rows, cols, vals, sr=sr)
+    qr, qc = _queries(13, q=12, nkeys=16)
+    got = distributed.sharded_query_fn(mesh, ("data",), sr=sr)(states, qr, qc)
+    want = np.full(12, -np.inf)
+    for i in range(I):
+        h = jax.tree.map(lambda x: x[i], states)
+        merged = hier.query_all(h, sr)
+        vals_i = np.asarray(jnp.stack(
+            [assoc.lookup(merged, r, c, sr) for r, c in zip(qr, qc)]))
+        want = np.maximum(want, vals_i)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5)
+
+
+def test_engine_vmaps_over_instances():
+    """The engine is the read half of the instance-batched layout: vmapped
+    lookups equal per-instance lookups."""
+    I = 3
+    rng = np.random.default_rng(14)
+    rows = jnp.asarray(rng.integers(0, NKEYS, (I, 8, 8)), jnp.int32)
+    cols = jnp.asarray(rng.integers(0, NKEYS, (I, 8, 8)), jnp.int32)
+    vals = jnp.ones((I, 8, 8), jnp.float32)
+    states = distributed.create_instances(I, (16, 64, 512), block_size=8)
+    states, _ = stream.ingest_instances(states, rows, cols, vals,
+                                        lazy_l0=True)
+    qr, qc = _queries(14, q=9)
+    batched = jax.jit(jax.vmap(
+        lambda h: engine.point_lookup(h, qr, qc), in_axes=(0,)))(states)
+    for i in range(I):
+        h = jax.tree.map(lambda x: x[i], states)
+        np.testing.assert_allclose(
+            np.asarray(batched[i]),
+            np.asarray(engine.point_lookup(h, qr, qc)),
+            rtol=1e-5, atol=1e-6)
