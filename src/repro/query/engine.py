@@ -73,6 +73,12 @@ def searchsorted_pair(seg_hi: Array, seg_lo: Array, q_hi: Array, q_lo: Array
         mh = seg_hi[mid_c]
         ml = seg_lo[mid_c]
         less = (mh < q_hi) | ((mh == q_hi) & (ml < q_lo))
+        # A converged search (lo == hi) must be a fixed point of the loop:
+        # the iteration count is static, so without this guard a query above
+        # every key re-reads slot C-1 after converging at C and overshoots
+        # to C+1 (any power-of-two C).  Guarding keeps the result <= C,
+        # which downstream span/prefix gathers rely on.
+        less = less & (lo_b < hi_b)
         return (jnp.where(less, mid + 1, lo_b), jnp.where(less, hi_b, mid))
 
     lo_b, _ = jax.lax.fori_loop(0, n_iter, body, (lo_b, hi_b))
@@ -161,11 +167,20 @@ def lookup(h, row, col, sr: Semiring = sr_mod.PLUS_TIMES,
     return out[0] if scalar else out
 
 
-def _row_span(seg: AssocSegment, rows: Array) -> Tuple[Array, Array]:
-    """[start, end) index span of each query row inside one canonical run."""
+def _row_span(seg: AssocSegment, rows: Array,
+              num_cols: int | None = None) -> Tuple[Array, Array]:
+    """[start, end) index span of each query row inside one canonical run.
+
+    With ``num_cols`` the end bounds only the IN-VIEW entries (col <
+    num_cols) — cols are the minor sort key, so a row's in-view entries
+    are the contiguous prefix of its span."""
     zeros = jnp.zeros_like(rows)
     s = searchsorted_pair(seg.hi, seg.lo, rows, zeros)
-    e = searchsorted_pair(seg.hi, seg.lo, rows + 1, zeros)
+    if num_cols is None:
+        e = searchsorted_pair(seg.hi, seg.lo, rows + 1, zeros)
+    else:
+        e = searchsorted_pair(seg.hi, seg.lo, rows,
+                              jnp.full_like(rows, num_cols))
     return s, e
 
 
@@ -182,10 +197,11 @@ def extract_rows(h, rows, num_cols: int, *,
     O(L * Q * (log C + W)) with W = ``width``.  The default width
     ``min(C, num_cols)`` can never truncate (a canonical run holds at most
     ``num_cols`` unique entries per row); a smaller width trades exactness
-    for speed and reports dropped entries in the returned ``truncated``
-    count per query.  Entries whose column key is >= ``num_cols`` fall
-    outside the dense view and are EXCLUDED (not clipped into the last
-    column).
+    for speed and reports dropped in-view entries in the returned
+    ``truncated`` count per query.  Entries whose column key is >=
+    ``num_cols`` fall outside the dense view and are EXCLUDED (not clipped
+    into the last column, and never counted as truncated — they are
+    dropped by design, not by the window).
 
     Returns ``(dense [Q, num_cols], truncated int32[Q])``.
     """
@@ -211,7 +227,9 @@ def extract_rows(h, rows, num_cols: int, *,
     for seg in runs:
         C = seg.capacity
         w = min(C, num_cols) if width is None else min(width, C)
-        s, e = _row_span(seg, rows)
+        # the span end bounds only in-view entries (col < num_cols): the
+        # excluded-by-design out-of-view tail must not count as truncation
+        s, e = _row_span(seg, rows, num_cols)
         idx = s[:, None] + jnp.arange(w, dtype=jnp.int32)[None, :]
         valid = idx < e[:, None]
         idx_c = jnp.minimum(idx, C - 1)
@@ -251,6 +269,8 @@ def range_total(h, row_lo, row_hi, sr: Semiring = sr_mod.PLUS_TIMES,
             prefix = jnp.concatenate(
                 [jnp.zeros((1,), seg.dtype), jnp.cumsum(seg.val)])
             zeros = jnp.zeros_like(row_lo)
+            # searchsorted_pair never exceeds C (convergence-guarded), so
+            # s, e index prefix (length C + 1) in-bounds by construction.
             s = searchsorted_pair(seg.hi, seg.lo, row_lo, zeros)
             e = searchsorted_pair(seg.hi, seg.lo, row_hi, zeros)
             out = out + (prefix[e] - prefix[s])

@@ -36,12 +36,15 @@ def make_ingest_fn(sr: Semiring = sr_mod.PLUS_TIMES, *,
                    fused: bool = True, chunk: int = 1,
                    batch_mode: str = "bucketed"):
     """Jitted (states, [I,T,B] stream) -> states round step (telemetry
-    dropped so XLA can DCE it on the hot path)."""
+    dropped so XLA can DCE it on the hot path).  The state is donated —
+    matching ``distributed.sharded_ingest_fn`` — so each round updates the
+    hierarchy buffers in place instead of copying the whole fleet state;
+    callers must use the returned states, never the argument."""
     def run(s, r, c, v):
         return stream.ingest_instances(
             s, r, c, v, sr=sr, use_kernel=use_kernel, lazy_l0=lazy_l0,
             fused=fused, chunk=chunk, batch_mode=batch_mode)[0]
-    return jax.jit(run)
+    return jax.jit(run, donate_argnums=(0,))
 
 
 def make_point_query_fn(sr: Semiring = sr_mod.PLUS_TIMES, *,

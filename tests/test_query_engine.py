@@ -13,6 +13,7 @@ DUPLICATE keys — the case a sorted-run-only engine would get wrong —
 plus read-while-ingest consistency (query after k interleaved steps ==
 drain-then-lookup at the same point) and the sharded fleet query.
 """
+import dataclasses
 import functools
 
 import jax
@@ -174,6 +175,55 @@ def test_extract_rows_excludes_out_of_view_cols():
         assert float(dense.sum()) == 2.0, f"lazy={lazy}: cols 9/600 leaked"
         assert float(dense[0, 7]) == 0.0
         assert int(trunc[0]) == 0
+    # the out-of-view TAIL of a row's span must not count as truncation
+    # either: 8 in-view cols fill the default window exactly; the 8
+    # out-of-view ones are dropped by design, not by the window.
+    h = hier.create((32, 128), block_size=16)
+    cols = jnp.concatenate([jnp.arange(8, dtype=jnp.int32),
+                            jnp.arange(8, dtype=jnp.int32) + 100])
+    h = hier.update(h, jnp.ones((16,), jnp.int32), cols, jnp.ones((16,)))
+    dense, trunc = engine.extract_rows(h, jnp.array([1]), num_cols=8,
+                                       l0_mode="canon")
+    assert float(dense.sum()) == 8.0
+    assert int(trunc[0]) == 0, "out-of-view tail counted as truncation"
+
+
+def test_searchsorted_full_run_no_overshoot():
+    """Regression: the fixed-iteration binary search must keep a converged
+    state (lo == hi) as a fixed point.  On a COMPLETELY FULL run (nnz ==
+    capacity, so no sentinel tail) with power-of-two C, a query above every
+    key used to re-read slot C-1 after converging at C and overshoot to
+    C+1 — extract_rows then admitted idx == C, clamped it back to C-1 and
+    semiring-added the last slot twice (and inflated ``truncated``)."""
+    C = 8
+    hi = jnp.arange(C, dtype=jnp.int32)
+    lo = jnp.zeros((C,), jnp.int32)
+    p = engine.searchsorted_pair(hi, lo, jnp.array([C], jnp.int32),
+                                 jnp.zeros((1,), jnp.int32))
+    assert int(p[0]) == C, f"overshoot: got {int(p[0])}, want {C}"
+
+    # End-to-end: full canonical layer-0 run (capacity 8, nnz 8), read the
+    # LAST row — its span's end search exceeds every key in the run.
+    h = hier.create((4, 16), block_size=4)
+    full = assoc.AssocSegment(
+        hi=jnp.asarray([0, 0, 1, 1, 2, 2, 3, 3], jnp.int32),
+        lo=jnp.asarray([0, 1, 0, 1, 0, 1, 0, 1], jnp.int32),
+        val=jnp.full((8,), 2.5, jnp.float32),
+        nnz=jnp.int32(8))
+    assert full.nnz == full.capacity
+    h = dataclasses.replace(h, layers=(full,) + h.layers[1:])
+    for mode in ("scan", "canon"):
+        dense, trunc = engine.extract_rows(h, jnp.array([3]), 8,
+                                           l0_mode=mode)
+        assert float(dense.sum()) == 5.0, \
+            f"{mode}: last slot double-counted (sum={float(dense.sum())})"
+        assert int(trunc[0]) == 0
+        got = engine.point_lookup(h, jnp.array([3]), jnp.array([1]),
+                                  l0_mode=mode)
+        assert float(got[0]) == 2.5
+        tot = engine.range_total(h, jnp.array([0]), jnp.array([100]),
+                                 l0_mode=mode)
+        assert float(tot[0]) == 20.0
 
 
 def test_point_lookup_broadcasts_scalar_against_vector():
