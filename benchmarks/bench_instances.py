@@ -7,28 +7,47 @@ and it is exactly where the fused cascade used to lose its win: a vmapped
 every spill depth's merge on every step (EXPERIMENTS.md §Multi-instance
 scaling recorded ~parity with the layered oracle).
 
-This benchmark pins the divergence fix as its own tracked artifact
-(``BENCH_instances.json``): one spill-inducing stream, one instance count
-(I >= 8), all four execution strategies —
+Two arms, one tracked artifact (``BENCH_instances.json``):
+
+SYNCHRONIZED — every instance starts cold on the same schedule, so planned
+spill depths advance in lockstep.  This is the PR-3 probe: it shows the
+divergence fix (bucketed/grouped vs the vmapped switch) but it flatters
+``batch_mode="bucketed"``, whose per-step cost I x W(max depth) is optimal
+exactly when every instance IS at the max depth.
+
+DESYNCHRONIZED — instance i is pre-warmed with i untimed blocks, so spill
+phases are staggered (heterogeneous streams / staggered starts: the
+realistic 30,000-instance regime).  Nearly every step then contains SOME
+deep instance, and bucketed degrades toward paying the deepest merge for
+the whole fleet every step, while ``batch_mode="grouped"`` (ISSUE 5) pays
+each cohort member only its own merge.  The grouped/bucketed ratio on this
+arm is the acceptance metric that made grouped the production default.
+
+Variants:
 
   * ``layered``          — reference per-layer cascade (vmapped lax.conds,
                            which also execute both sides under vmap),
   * ``fused_switch``     — PRE-fix fused layout (vmapped lax.switch),
   * ``fused_branchfree`` — one masked fixed-shape merge per instance
                            (hier._fused_execute_planned under vmap),
-  * ``fused_bucketed``   — production default: plan all depths, branch
-                           once per step on the deepest
-                           (stream.update_instances).
+  * ``fused_bucketed``   — PR-3 default: plan all depths, branch once per
+                           step on the deepest (stream.update_instances),
+  * ``fused_grouped``    — production default: per-depth-cohort execution
+                           (append cohort batched, deeper cohorts drain one
+                           member at a time).
 
-Derived: per-variant aggregate updates/s, each fused mode's speedup over
-``layered`` and over ``fused_switch``.  The acceptance bar for the
-divergence fix is bucketed/layered >= 1.5x at I >= 8 (ISSUE 3).
+Derived: per-variant aggregate updates/s per arm, fused modes' speedups
+over ``layered``/``fused_switch`` (sync arm), and the grouped/bucketed
+ratio per arm.  Acceptance bars: divergence fix bucketed/layered >= 1.5x
+at I >= 8 (ISSUE 3); desync grouped/bucketed >= 1.3x with sync
+grouped/bucketed >= 0.95x (ISSUE 5).
 """
 from __future__ import annotations
 
 import argparse
 
 import jax
+import jax.numpy as jnp
 
 from benchmarks.common import Report, persist, timeit
 from repro.core import distributed, stream
@@ -46,7 +65,29 @@ VARIANTS = dict(
     fused_switch=dict(fused=True, lazy_l0=True, batch_mode="switch"),
     fused_branchfree=dict(fused=True, lazy_l0=True, batch_mode="branchfree"),
     fused_bucketed=dict(fused=True, lazy_l0=True, batch_mode="bucketed"),
+    fused_grouped=dict(fused=True, lazy_l0=True, batch_mode="grouped"),
 )
+
+# the desync arm tracks the batched layouts the default decision is between
+# (plus branchfree as the no-grouping reference)
+DESYNC_VARIANTS = ("fused_branchfree", "fused_bucketed", "fused_grouped")
+
+
+def _staggered_states(key, cfg):
+    """Fleet with phase-shifted spill schedules: instance i pre-ingests i
+    untimed blocks, so each instance's occupancy — and therefore the depth
+    it plans on any given timed step — is offset by i steps."""
+    n_inst, block, cuts = cfg["instances"], cfg["block"], cfg["cuts"]
+    states = []
+    for i in range(n_inst):
+        h = jax.tree.map(lambda x: x[0],
+                         distributed.create_instances(1, cuts, block))
+        if i:
+            r, c, v = instance_streams(jax.random.fold_in(key, 7000 + i),
+                                       1, i, block, scale=cfg["scale"])
+            h, _ = stream.ingest(h, r[0], c[0], v[0], lazy_l0=True)
+        states.append(h)
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
 
 
 def main(report: Report | None = None, smoke: bool = False):
@@ -59,6 +100,8 @@ def main(report: Report | None = None, smoke: bool = False):
                                         scale=scale)
 
     out = {"config": dict(cfg, smoke=smoke)}
+
+    # ------------------------------------------------- synchronized arm ----
     for name, kw in VARIANTS.items():
         run = jax.jit(lambda s, r, c, v, kw=kw: stream.ingest_instances(
             s, r, c, v, **kw)[0])
@@ -68,7 +111,8 @@ def main(report: Report | None = None, smoke: bool = False):
         out[f"rate_{name}"] = rate
         report.add(f"instances_{name}", sec / blocks,
                    f"{rate:,.0f} upd/s agg @ {n_inst} instances")
-    for name in ("fused_switch", "fused_branchfree", "fused_bucketed"):
+    for name in ("fused_switch", "fused_branchfree", "fused_bucketed",
+                 "fused_grouped"):
         vs_layered = out[f"rate_{name}"] / out["rate_layered"]
         vs_switch = out[f"rate_{name}"] / out["rate_fused_switch"]
         report.add(f"instances_{name}_speedup", 0.0,
@@ -76,6 +120,32 @@ def main(report: Report | None = None, smoke: bool = False):
                    f"{name}/fused_switch = {vs_switch:.2f}x")
         out[f"{name}_vs_layered"] = vs_layered
         out[f"{name}_vs_switch"] = vs_switch
+    out["sync_grouped_vs_bucketed"] = \
+        out["rate_fused_grouped"] / out["rate_fused_bucketed"]
+    report.add("instances_sync_grouped_vs_bucketed", 0.0,
+               f"synchronized grouped/bucketed = "
+               f"{out['sync_grouped_vs_bucketed']:.2f}x")
+
+    # ---------------------------------------------- desynchronized arm ----
+    warm_states = _staggered_states(key, cfg)
+    for name in DESYNC_VARIANTS:
+        kw = VARIANTS[name]
+        run = jax.jit(lambda s, r, c, v, kw=kw: stream.ingest_instances(
+            s, r, c, v, **kw)[0])
+        sec = timeit(run, warm_states, rows, cols, vals, warmup=1, iters=3)
+        rate = n_inst * blocks * block / sec
+        out[f"rate_desync_{name}"] = rate
+        report.add(f"instances_desync_{name}", sec / blocks,
+                   f"{rate:,.0f} upd/s agg @ {n_inst} staggered instances")
+    out["desync_grouped_vs_bucketed"] = \
+        out["rate_desync_fused_grouped"] / out["rate_desync_fused_bucketed"]
+    out["desync_grouped_vs_branchfree"] = \
+        out["rate_desync_fused_grouped"] / out["rate_desync_fused_branchfree"]
+    report.add("instances_desync_grouped_vs_bucketed", 0.0,
+               f"desynchronized grouped/bucketed = "
+               f"{out['desync_grouped_vs_bucketed']:.2f}x "
+               f"(acceptance bar >= 1.3x); grouped/branchfree = "
+               f"{out['desync_grouped_vs_branchfree']:.2f}x")
     return out
 
 

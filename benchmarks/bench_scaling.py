@@ -39,8 +39,10 @@ SMOKE = dict(block=512, blocks=4, cuts=(1024, 8192, 65536), scale=14)
 
 VARIANTS = dict(
     layered=dict(fused=False, lazy_l0=False),
-    # the production default: divergence-free depth-bucketed batched step
-    fused_lazy=dict(fused=True, lazy_l0=True, batch_mode="bucketed"),
+    # the production default: divergence-free depth-cohort grouped step
+    # (PR 3 tracked "bucketed" here; the fused_lazy row always means
+    # "whatever ingest_instances ships as default")
+    fused_lazy=dict(fused=True, lazy_l0=True, batch_mode="grouped"),
     # the pre-fix layout: vmapped lax.switch executes every spill depth
     fused_lazy_switch=dict(fused=True, lazy_l0=True, batch_mode="switch"),
 )

@@ -205,11 +205,16 @@ class D4MConfig:
     fused: bool = True                  # single-sort fused spill cascade
     chunk: int = 1                      # stream blocks pre-combined per update
     # instance-batched execution strategy (stream.ingest_instances):
-    # "bucketed" plans every instance's spill depth and branches once per
-    # step on the deepest; "branchfree" = one masked merge per instance;
-    # "switch" = legacy vmapped lax.switch (executes every branch under
-    # vmap — the divergence A/B baseline, EXPERIMENTS.md §Multi-instance)
-    batch_mode: str = "bucketed"
+    # "grouped" plans every instance's spill depth and executes per depth
+    # cohort (append cohort batched, deeper cohorts drain one member at a
+    # time) so a lone deep instance pays only its own merge — the
+    # desynchronized-fleet default (EXPERIMENTS.md §Desynchronization);
+    # "bucketed" branches once per step on the deepest planned depth (the
+    # synchronized-fleet A/B baseline); "branchfree" = one masked merge per
+    # instance; "switch" = legacy vmapped lax.switch (executes every branch
+    # under vmap — the divergence A/B baseline, EXPERIMENTS.md
+    # §Multi-instance)
+    batch_mode: str = "grouped"
     # --- read path (repro/query: engine + service) ---
     query_batch: int = 256              # Q-vector width per engine dispatch
     # layer-0 strategy for queries: "auto" picks raw scan vs one in-dispatch

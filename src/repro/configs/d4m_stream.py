@@ -26,7 +26,7 @@ def config() -> D4MConfig:
         fused=True,
         lazy_l0=True,
         chunk=1,
-        batch_mode="bucketed",
+        batch_mode="grouped",
     )
 
 
@@ -41,5 +41,5 @@ def smoke_config() -> D4MConfig:
         fused=True,
         lazy_l0=True,
         chunk=2,
-        batch_mode="bucketed",
+        batch_mode="grouped",
     )

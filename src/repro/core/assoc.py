@@ -255,6 +255,28 @@ def extract_row(seg: AssocSegment, row) -> Tuple[Array, Array, Array]:
     return seg.lo, seg.val, m
 
 
+def _live_slots(seg: AssocSegment, sorted: bool) -> Array:
+    """Validity mask for a reduction input.
+
+    Canonical segments (``sorted=True``) are fully described by the
+    sentinel invariant: slots [nnz, C) hold SENTINEL / semiring zero.  A
+    RAW buffer (``sorted=False`` — the lazy layer-0 append buffer, or any
+    externally constructed / checkpoint-restored segment) only promises
+    that slots [0, nnz) are meaningful, so raw reductions must ALSO gate on
+    ``arange(C) < nnz`` — the same live-slot gate ``engine._raw_point`` and
+    ``engine.extract_rows`` apply.  Every in-repo ingest path happens to
+    keep the tail sentinel-clean today (verified across fused/layered x
+    lazy x kernel x masked-wide-clobber in PR 5), but the raw-buffer
+    CONTRACT is nnz, not the tail, and trusting the tail made the analytics
+    reductions wrong for any state that doesn't uphold the stronger
+    invariant.
+    """
+    valid = seg.hi != SENTINEL
+    if not sorted:
+        valid &= jnp.arange(seg.capacity) < seg.nnz
+    return valid
+
+
 def reduce_rows(seg: AssocSegment, num_rows: int,
                 sr: Semiring = sr_mod.PLUS_TIMES,
                 sorted: bool = True) -> Array:
@@ -262,18 +284,27 @@ def reduce_rows(seg: AssocSegment, num_rows: int,
 
     ``sorted=False`` lifts the canonical-form assumption so the same
     reduction runs over a RAW buffer (the lazy layer-0 append buffer, with
-    unsorted and duplicated keys) — the streaming query engine
-    (repro/query) composes per-layer reductions without merging layers.
+    unsorted and duplicated keys), gating live slots by ``nnz`` instead of
+    trusting the sentinel tail — the streaming query engine (repro/query)
+    composes per-layer reductions without merging layers.
     """
-    ids = jnp.where(seg.hi == SENTINEL, num_rows, seg.hi)
+    ids = jnp.where(_live_slots(seg, sorted), seg.hi, num_rows)
     # hi is sorted in canonical form and clipping maps to the max id only.
     out = sr.segment_add(seg.val, ids, num_rows + 1, sorted=sorted)
     return out[:num_rows]
 
 
 def reduce_cols(seg: AssocSegment, num_cols: int,
-                sr: Semiring = sr_mod.PLUS_TIMES) -> Array:
-    ids = jnp.where(seg.lo == SENTINEL, num_cols, seg.lo)
+                sr: Semiring = sr_mod.PLUS_TIMES,
+                sorted: bool = True) -> Array:
+    """Dense per-column reduction (in-degrees under plus.times).
+
+    ``sorted`` here means "canonical segment", matching ``reduce_rows`` —
+    ``lo`` is the minor sort key so the segment ids never earn the
+    ``indices_are_sorted`` hint either way, but ``sorted=False`` adds the
+    raw-buffer live-slot gate by ``nnz``.
+    """
+    ids = jnp.where(_live_slots(seg, sorted), seg.lo, num_cols)
     out = sr.segment_add(seg.val, ids, num_cols + 1)
     return out[:num_cols]
 
@@ -284,10 +315,11 @@ def spmv(seg: AssocSegment, x: Array, num_rows: int,
 
     This is the paper's Fig 1 graph operation (neighbors of a vertex) when x
     is an indicator vector.  ``sorted=False`` admits a RAW buffer (lazy
-    layer-0 append buffer) — see ``reduce_rows``.
+    layer-0 append buffer), live slots gated by ``nnz`` — see
+    ``reduce_rows``.
     """
     zero = sr_mod.integer_zero(sr, seg.dtype)
-    valid = seg.hi != SENTINEL
+    valid = _live_slots(seg, sorted)
     gathered = x[jnp.clip(seg.lo, 0, x.shape[0] - 1)]
     prod = jnp.where(valid, sr.mul(seg.val, gathered.astype(seg.dtype)), zero)
     ids = jnp.where(valid, seg.hi, num_rows)
@@ -295,17 +327,19 @@ def spmv(seg: AssocSegment, x: Array, num_rows: int,
 
 
 def spmv_t(seg: AssocSegment, x: Array, num_cols: int,
-           sr: Semiring = sr_mod.PLUS_TIMES) -> Array:
+           sr: Semiring = sr_mod.PLUS_TIMES, sorted: bool = True) -> Array:
     """y = A' (.) x under the semiring: y[c] = add_r mul(A[r,c], x[r]).
 
     The transpose contraction — with ``spmv`` it composes the A'(Ax)
     correlation step (A'A applied to a vector) WITHOUT materializing A'A
     or even the merged A: the streaming query engine sums the per-layer
-    contractions.  ``lo`` is the minor sort key, so the segment ids are
-    never sorted — no ``sorted`` knob to get wrong.
+    contractions.  ``lo`` is the minor sort key, so the segment ids never
+    earn the ``indices_are_sorted`` hint; ``sorted=False`` marks a RAW
+    buffer input and gates live slots by ``nnz`` like ``spmv`` — the
+    raw-buffer treatment it was missing until PR 5.
     """
     zero = sr_mod.integer_zero(sr, seg.dtype)
-    valid = seg.hi != SENTINEL
+    valid = _live_slots(seg, sorted)
     gathered = x[jnp.clip(seg.hi, 0, x.shape[0] - 1)]
     prod = jnp.where(valid, sr.mul(seg.val, gathered.astype(seg.dtype)), zero)
     ids = jnp.where(valid, seg.lo, num_cols)

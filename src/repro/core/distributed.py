@@ -65,7 +65,7 @@ def sharded_ingest_fn(mesh: Mesh, data_axes: Tuple[str, ...],
                       use_kernel: bool = False,
                       fused: bool = True,
                       chunk: int = 1,
-                      batch_mode: str = "bucketed"):
+                      batch_mode: str = "grouped"):
     """Build the distributed ingest step.
 
     States and streams are sharded over ``data_axes`` on their instance
@@ -76,10 +76,14 @@ def sharded_ingest_fn(mesh: Mesh, data_axes: Tuple[str, ...],
     pre-combines that many stream blocks per hierarchy update.
 
     ``batch_mode`` picks the instance-batched execution strategy
-    (``stream.ingest_instances``): the ``"bucketed"`` default plans every
-    local instance's spill depth and branches ONCE per step on the deepest
-    one — the branch predicate is per-device, so the fix for vmapped
-    branch divergence costs no collectives either.
+    (``stream.ingest_instances``): the ``"grouped"`` default plans every
+    local instance's spill depth and executes per depth cohort (batched
+    append for the depth-0 cohort, a dynamic-trip merge loop per deeper
+    cohort), so one deep instance costs its own merge instead of dragging
+    the device's whole instance group into it — every predicate and trip
+    count is per-device, so the desynchronization fix costs no collectives
+    either.  ``"bucketed"`` is the PR-3 branch-on-deepest layout (the
+    synchronized-fleet A/B baseline).
     """
     spec = P(data_axes)
 

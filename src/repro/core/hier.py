@@ -30,8 +30,10 @@ for every instance on every step.  ``batch_mode="branchfree"`` executes the
 planned depth with ZERO control flow instead — one fixed-shape masked
 ``merge_many`` (``_fused_execute_planned``) whose participating layers are
 gated by ``assoc.gate_segment`` — and ``core.stream.ingest_instances``
-buckets whole instance batches by their max planned depth on top, so the
-common all-append step pays no sort at all (tests/test_batched_ingest.py).
+groups whole instance batches by planned depth on top (``batch_mode=
+"grouped"``): the all-append cohort pays no sort at all and each deeper
+cohort drains one member at a time, so a lone deep instance never drags
+the fleet into its merge (tests/test_batched_ingest.py).
 """
 from __future__ import annotations
 
@@ -268,11 +270,12 @@ def _fused_execute_planned(h: HierAssoc, rows: Array, cols: Array,
     batched switch lowers to select-over-all-branches and charged every
     instance every depth's merge (EXPERIMENTS.md §Multi-instance scaling).
 
-    ``up_to`` bounds the merge width statically: the depth-bucketed batched
-    ingest (core/stream.py) calls this with ``up_to = max(planned depths)``
-    so a shallow cohort never touches deep-layer buffers; ``up_to = L - 1``
-    is the general single-call form.  ``depth <= up_to`` is the caller's
-    contract.  With ``lazy_l0`` and a depth-0 plan the lazy append is still
+    ``up_to`` bounds the merge width statically: the batched ingest layouts
+    (core/stream.py) call this with ``up_to = max(planned depths)``
+    (bucketed) or with each cohort's own depth (grouped, one member at a
+    time) so a shallow cohort never touches deep-layer buffers;
+    ``up_to = L - 1`` is the general single-call form.  ``depth <= up_to``
+    is the caller's contract.  With ``lazy_l0`` and a depth-0 plan the lazy append is still
     taken (selected per instance), and when ``up_to == 0`` with a
     statically-fitting block the merge is skipped entirely — the all-append
     cohort pays zero sorts.
@@ -401,8 +404,9 @@ def _update_fused(h: HierAssoc, rows: Array, cols: Array, vals: Array,
     ``"branchfree"`` routes through ``_fused_execute_planned``: one
     fixed-shape masked merge serves all depths, so the vmapped layout pays
     one merge per instance.  Instance-batched callers should prefer
-    ``core.stream.ingest_instances(batch_mode="bucketed")``, which
-    additionally skips the merge for all-depth-0 steps.
+    ``core.stream.ingest_instances(batch_mode="grouped")``, which
+    additionally skips the merge for append cohorts and sizes each deeper
+    cohort member's merge to its own planned depth.
 
     Masked blocks are planned at their live-slot count ``sum(mask)`` (not
     the block capacity B) and compacted front-first with one O(B) scatter,
@@ -519,8 +523,8 @@ def update(h: HierAssoc, rows: Array, cols: Array, vals: Array,
     executes it as one masked fixed-shape merge with no control flow — the
     divergence-free form a ``vmap`` over instances needs, because a batched
     switch executes every branch.  Instance-batched ingest should use
-    ``core.stream.ingest_instances(batch_mode="bucketed")``, which adds
-    batch-level depth bucketing on top.
+    ``core.stream.ingest_instances(batch_mode="grouped")``, which adds
+    batch-level depth-cohort grouping on top.
     """
     if lazy_l0 and sr.name != "plus.times":
         raise ValueError("lazy_l0 requires the plus.times semiring")

@@ -14,35 +14,44 @@ layered reference path (the equivalence oracle).
 
 Instances: `ingest` is written for one hierarchy and one [T, B] block stream;
 the production multi-instance layout is ``ingest_instances``.  Its default
-``batch_mode="bucketed"`` swaps the loop order to ``scan`` over time of a
+``batch_mode="grouped"`` swaps the loop order to ``scan`` over time of a
 BATCHED step: every instance's spill depth is planned first (scalar
-arithmetic), then one batch-level ``lax.switch`` on the *maximum* planned
-depth executes the step — a scalar switch, not a vmapped one, so it really
-branches.  The all-depth-0 cohort (the overwhelmingly common case) runs as a
-pure batched append scatter with zero sorts, and a spilling step runs ONE
-divergence-free masked merge per instance (``hier._fused_execute_planned``)
-sized to the deepest planned layer.  ``batch_mode="branchfree"`` keeps
-vmap-of-scan with the per-instance masked merge; ``batch_mode="switch"`` is
-the legacy vmapped ``lax.switch`` layout, which lowers to select-over-all-
-branches and made the fused win vanish under vmap (EXPERIMENTS.md
-§Multi-instance scaling).  ``core.distributed`` places instance groups on
-devices; all modes stay collective-free on the update path.
+arithmetic), then the step executes PER DEPTH COHORT — the depth-0 cohort
+(the overwhelmingly common case) runs as a pure batched append scatter with
+zero sorts, and each deeper cohort d drains through a dynamic-trip-count
+loop that pays exactly one masked merge sized to layers [0, d] PER COHORT
+MEMBER (``hier._fused_execute_planned`` on one instance at a time, reached
+through a depth-ordered ``argsort`` index vector), skipped entirely when the
+cohort is empty.  A step's cost is therefore sum_i W(depth_i) — one deep
+instance costs ITS merge, not a fleet-wide one.  ``batch_mode="bucketed"``
+is the PR-3 layout: one batch-level ``lax.switch`` on the *maximum* planned
+depth, so a single deep instance drags every instance in the batch into a
+merge sized to the deepest layer — optimal for synchronized fleets, and the
+A/B baseline the desynchronized-fleet benchmark compares against
+(EXPERIMENTS.md §Desynchronization matrix).  ``batch_mode="branchfree"``
+keeps vmap-of-scan with the per-instance masked merge; ``batch_mode=
+"switch"`` is the legacy vmapped ``lax.switch`` layout, which lowers to
+select-over-all-branches and made the fused win vanish under vmap
+(EXPERIMENTS.md §Multi-instance scaling).  ``core.distributed`` places
+instance groups on devices; all modes stay collective-free on the update
+path (the cohort loop's trip counts are per-device scalars).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import hier
+from repro.core import assoc, hier
 from repro.core import semiring as sr_mod
 from repro.core.hier import HierAssoc
 from repro.core.semiring import Semiring
 
 Array = jax.Array
 
-BATCH_MODES = ("bucketed", "branchfree", "switch")
+BATCH_MODES = ("grouped", "bucketed", "branchfree", "switch")
 
 
 def _chunk_stream(rows: Array, cols: Array, vals: Array, chunk: int,
@@ -100,8 +109,8 @@ def ingest(h: HierAssoc, rows: Array, cols: Array, vals: Array,
     ``batch_mode`` selects the fused execution strategy per update
     (``"switch"`` default for this single-instance entry point,
     ``"branchfree"`` for callers that vmap this function directly —
-    ``ingest_instances`` picks for you and additionally offers
-    ``"bucketed"``).
+    ``ingest_instances`` picks for you and additionally offers the batched
+    ``"grouped"``/``"bucketed"`` layouts).
 
     Returns the final state plus per-step telemetry (layer-0 nnz and
     cumulative spill counts) used by the update-rate benchmarks to verify
@@ -170,48 +179,191 @@ def ingest_jit(cuts: Tuple[int, ...], block_size: int, dtype=jnp.float32,
     return jax.jit(run)
 
 
+def _select_depth0_leaves(states: HierAssoc, s0: HierAssoc, take0: Array
+                          ) -> HierAssoc:
+    """Keep the depth-0 executor's result for cohort members, the original
+    state for everyone else — touching ONLY the leaves a depth-0 step can
+    change (layer 0 and the scalar ledgers).  Deep layer buffers come from
+    the original state untouched, so the all-append fast path never moves
+    I x C_deep bytes through a select."""
+    def sel(a: Array, b: Array) -> Array:
+        m = take0.reshape(take0.shape + (1,) * (a.ndim - 1))
+        return jnp.where(m, a, b)
+
+    layer0 = jax.tree.map(sel, s0.layers[0], states.layers[0])
+    return dataclasses.replace(
+        states,
+        layers=(layer0,) + states.layers[1:],
+        spills=sel(s0.spills, states.spills),
+        overflow=sel(s0.overflow, states.overflow),
+        n_updates=sel(s0.n_updates, states.n_updates),
+        n_updates_hi=sel(s0.n_updates_hi, states.n_updates_hi))
+
+
+def _grouped_execute(states: HierAssoc, rows: Array, cols: Array, vals: Array,
+                     n_live: Array, depths: Array, *, sr: Semiring,
+                     use_kernel: bool, lazy_l0: bool, may_not_fit: bool
+                     ) -> HierAssoc:
+    """Depth-cohort grouped executor: per-step cost = sum_i W(depth_i).
+
+    The depth-0 cohort executes as the batched append scatter (zero sorts
+    with ``lazy_l0``), selected per instance.  Instances planning deeper
+    spills drain through one dynamic-trip-count ``fori_loop`` PER STATIC
+    DEPTH, reached through a depth-ordered ``argsort`` index vector: cohort
+    d occupies a contiguous run of the sorted order, and each iteration
+    slices ONE member's layers [0, d], runs the masked fused merge sized to
+    exactly those layers, and scatters the result back.  A ``lax.cond``
+    skips a depth entirely when its cohort is empty that step, so a batch
+    with no deep instance never touches deep-layer buffers — and a batch
+    WITH one pays that one instance's merge, not a fleet-wide one (the
+    ``batch_mode="bucketed"`` failure mode this replaces as the default).
+
+    Layers deeper than a cohort's d enter the sliced state as loop-invariant
+    empty dummies carrying only the member's true nnz scalar (the executor
+    reads deep layers solely for the last-layer pressure flag), so a depth-1
+    iteration moves O(W_1) bytes even when C_{L-1} is huge.
+    """
+    L = len(states.cuts)
+    caps = tuple(l.hi.shape[-1] for l in states.layers)
+    vdtype = states.layers[0].val.dtype
+
+    # depth-0 cohort: vmapped up_to=0 executor (pure append under lazy_l0);
+    # non-members' results are computed against layer 0 only and discarded.
+    # The whole pass is cond-skipped when no instance appends this step, so
+    # the per-step cost really is sum_i W(depth_i).
+    take0 = depths == 0
+
+    def depth0_pass(s):
+        s0 = jax.vmap(
+            lambda h, r, c, v, nl: hier._fused_execute_planned(
+                h, r, c, v, nl, jnp.int32(0), up_to=0, sr=sr,
+                use_kernel=use_kernel, lazy_l0=lazy_l0,
+                may_not_fit=may_not_fit))(s, rows, cols, vals, n_live)
+        return _select_depth0_leaves(s, s0, take0)
+
+    cur = jax.lax.cond(jnp.any(take0), depth0_pass, lambda s: s, states)
+
+    order = jnp.argsort(depths).astype(jnp.int32)
+    ds = depths[order]
+
+    def cohort_pass(cur: HierAssoc, d: int) -> HierAssoc:
+        start = jnp.searchsorted(ds, d, side="left").astype(jnp.int32)
+        n_d = jnp.searchsorted(ds, d, side="right").astype(jnp.int32) - start
+        dummies = tuple(assoc.empty(caps[i], vdtype, sr)
+                        for i in range(d + 1, L))
+
+        def body(j, carry: HierAssoc) -> HierAssoc:
+            idx = order[start + j]
+            pick = lambda x: jax.lax.dynamic_index_in_dim(
+                x, idx, 0, keepdims=False)
+            shallow = jax.tree.map(pick, tuple(carry.layers[:d + 1]))
+            deep = tuple(
+                dataclasses.replace(dm, nnz=pick(carry.layers[i].nnz))
+                for i, dm in zip(range(d + 1, L), dummies))
+            one = HierAssoc(layers=shallow + deep,
+                            spills=pick(carry.spills),
+                            overflow=pick(carry.overflow),
+                            n_updates=pick(carry.n_updates),
+                            n_updates_hi=pick(carry.n_updates_hi),
+                            cuts=carry.cuts)
+            out = hier._fused_execute_planned(
+                one, pick(rows), pick(cols), pick(vals), pick(n_live),
+                jnp.int32(d), up_to=d, sr=sr, use_kernel=use_kernel,
+                lazy_l0=lazy_l0)
+            put = lambda full, v: jax.lax.dynamic_update_index_in_dim(
+                full, v, idx, 0)
+            new_shallow = jax.tree.map(put, tuple(carry.layers[:d + 1]),
+                                       tuple(out.layers[:d + 1]))
+            return dataclasses.replace(
+                carry, layers=new_shallow + carry.layers[d + 1:],
+                spills=put(carry.spills, out.spills),
+                overflow=put(carry.overflow, out.overflow),
+                n_updates=put(carry.n_updates, out.n_updates),
+                n_updates_hi=put(carry.n_updates_hi, out.n_updates_hi))
+
+        return jax.lax.cond(
+            n_d > 0,
+            lambda s: jax.lax.fori_loop(0, n_d, body, s),
+            lambda s: s,
+            cur)
+
+    for d in range(1, L):
+        cur = cohort_pass(cur, d)
+    return cur
+
+
 def update_instances(states: HierAssoc, rows: Array, cols: Array, vals: Array,
                      sr: Semiring = sr_mod.PLUS_TIMES,
                      use_kernel: bool = False,
-                     lazy_l0: bool = False) -> HierAssoc:
-    """One depth-bucketed fused update of a whole instance batch ([I, B]).
+                     lazy_l0: bool = False,
+                     batch_mode: str = "grouped",
+                     mask: Array | None = None) -> HierAssoc:
+    """One fused update of a whole instance batch ([I, B]).
 
     Plan-then-execute across the batch: every instance's spill depth comes
     first (vmapped scalar arithmetic over nnz counters — no array data
-    touched), then ONE batch-level ``lax.switch`` on the maximum planned
-    depth runs the step.  The switch predicate is a plain scalar (this
-    function must NOT be called under vmap — it IS the batched layout), so
-    unlike a vmapped switch it really branches:
+    touched), then ``batch_mode`` picks how the planned depths execute.
+    Both predicates are plain per-batch scalars (this function must NOT be
+    called under vmap — it IS the batched layout), so unlike a vmapped
+    switch they really branch:
 
-      * max depth 0 — the common case — executes the pure batched append
-        scatter (zero sorts with ``lazy_l0``; a layer-0-only merge without);
-      * max depth d executes one divergence-free masked merge per instance
-        (``hier._fused_execute_planned``) sized to layers [0, d]; instances
-        planned shallower than d simply gate deeper layers out of their
-        merge, and depth-0 instances keep their append via ``jnp.where``.
+      * ``"grouped"`` (production default) — per-depth-cohort execution:
+        the depth-0 cohort runs the pure batched append scatter (zero sorts
+        with ``lazy_l0``; a layer-0-only merge without), and each deeper
+        cohort d drains through a dynamic-trip loop paying ONE masked merge
+        sized to layers [0, d] per member (``_grouped_execute``).  Step
+        cost is sum_i W(depth_i): one deep instance does not drag the rest
+        of the fleet into its merge.
+      * ``"bucketed"`` — ONE batch-level ``lax.switch`` on the maximum
+        planned depth: max depth 0 executes the batched append, max depth d
+        executes one divergence-free masked merge per instance
+        (``hier._fused_execute_planned``) sized to layers [0, d] for ALL
+        instances; shallower instances gate deeper layers out and depth-0
+        instances keep their append via ``jnp.where``.  Cost is
+        I x W(max depth) — optimal when the fleet spills in lockstep, the
+        A/B baseline for desynchronized fleets.
+
+    ``mask`` ([I, B] bool) blanks per-entry updates exactly like
+    ``hier.update``'s mask: masked blocks are planned and counted at their
+    live-entry count ``sum(mask)`` per instance.
 
     Equivalent per instance to ``hier.update(fused=True)`` — contents,
     spills, overflow and update counters (tests/test_batched_ingest.py).
-    Zero collectives: under ``shard_map`` the predicate is per-device.
+    Zero collectives: under ``shard_map`` every predicate is per-device.
     """
     if lazy_l0 and sr.name != "plus.times":
         raise ValueError("lazy_l0 requires the plus.times semiring")
+    if batch_mode not in ("grouped", "bucketed"):
+        raise ValueError(f"update_instances batch_mode must be 'grouped' or "
+                         f"'bucketed', got {batch_mode!r}")
     B = rows.shape[-1]
     L = len(states.cuts)
+    caps0 = states.layers[0].hi.shape[-1]
+    # mirrors hier._update_fused: only a MASKED block wider than the
+    # creation block size can physically clobber on the append fast path
+    may_not_fit = mask is not None and B > caps0 - states.cuts[0]
     prep = jax.vmap(
-        lambda h, r, c, v: hier._prepare_block(h, r, c, v, None, sr))
-    rows, cols, vals, n_live = prep(states, rows, cols, vals)
+        lambda h, r, c, v, m: hier._prepare_block(h, r, c, v, m, sr),
+        in_axes=(0, 0, 0, 0, None if mask is None else 0))
+    rows, cols, vals, n_live = prep(states, rows, cols, vals, mask)
     depths = jax.vmap(hier._plan_spill_depth, in_axes=(0, 0))(states, n_live)
+
+    if batch_mode == "grouped":
+        return _grouped_execute(states, rows, cols, vals, n_live, depths,
+                                sr=sr, use_kernel=use_kernel, lazy_l0=lazy_l0,
+                                may_not_fit=may_not_fit)
+
     dmax = jnp.max(depths)
 
     def make_branch(d: int):
         def run(operands):
             s, dep = operands
             return jax.vmap(
-                lambda h, r, c, v, dd: hier._fused_execute_planned(
-                    h, r, c, v, jnp.int32(B), dd, up_to=d, sr=sr,
-                    use_kernel=use_kernel, lazy_l0=lazy_l0))(
-                s, rows, cols, vals, dep)
+                lambda h, r, c, v, nl, dd: hier._fused_execute_planned(
+                    h, r, c, v, nl, dd, up_to=d, sr=sr,
+                    use_kernel=use_kernel, lazy_l0=lazy_l0,
+                    may_not_fit=may_not_fit))(
+                s, rows, cols, vals, n_live, dep)
         return run
 
     return jax.lax.switch(dmax, [make_branch(d) for d in range(L)],
@@ -224,19 +376,26 @@ def ingest_instances(states: HierAssoc, rows: Array, cols: Array, vals: Array,
                      lazy_l0: bool = False,
                      fused: bool = True,
                      chunk: int = 1,
-                     batch_mode: str = "bucketed"):
+                     batch_mode: str = "grouped"):
     """Instance-batched ingest: states is an instance-batched HierAssoc
     pytree and the stream arrays are [I, T, B].
 
     ``batch_mode`` (fused path only; the layered oracle always vmaps):
 
-      * ``"bucketed"`` (production default) — ``lax.scan`` over time of the
-        depth-bucketed batched step (``update_instances``): the update-path
-        cost of a step is set by the DEEPEST planned spill in the batch,
-        not by the sum over all depths, and the common all-append step pays
-        no sort at all.
+      * ``"grouped"`` (production default) — ``lax.scan`` over time of the
+        depth-cohort batched step (``update_instances``): the update-path
+        cost of a step is the SUM of each instance's own planned depth —
+        the depth-0 cohort appends with no sort at all, and each deeper
+        cohort drains one member at a time through a dynamic-trip loop, so
+        one deep instance never drags the rest of the fleet into its
+        merge (the desynchronized-fleet regime; EXPERIMENTS.md
+        §Desynchronization matrix).
+      * ``"bucketed"`` — the PR-3 layout: one batch-level ``lax.switch``
+        per step on the DEEPEST planned spill, charging every instance a
+        merge sized to that depth.  Matches grouped when the fleet spills
+        in lockstep; the desynchronization A/B baseline.
       * ``"branchfree"`` — vmap-of-scan with the per-instance masked merge
-        (one fixed-shape merge per instance per step, no batch bucketing).
+        (one fixed-shape merge per instance per step, no batch grouping).
       * ``"switch"`` — the legacy vmapped ``lax.switch`` layout; kept as
         the A/B baseline because a batched switch executes every branch.
 
@@ -251,7 +410,8 @@ def ingest_instances(states: HierAssoc, rows: Array, cols: Array, vals: Array,
             lambda h, r, c, v: ingest(
                 h, r, c, v, sr=sr, use_kernel=use_kernel, lazy_l0=lazy_l0,
                 fused=fused, chunk=chunk,
-                batch_mode=batch_mode if batch_mode != "bucketed"
+                batch_mode=batch_mode if batch_mode in ("switch",
+                                                        "branchfree")
                 else "switch"))(states, rows, cols, vals)
 
     if chunk > 1:
@@ -266,7 +426,7 @@ def ingest_instances(states: HierAssoc, rows: Array, cols: Array, vals: Array,
     def step(s: HierAssoc, block):
         r, c, v = block
         new_s = update_instances(s, r, c, v, sr=sr, use_kernel=use_kernel,
-                                 lazy_l0=lazy_l0)
+                                 lazy_l0=lazy_l0, batch_mode=batch_mode)
         telemetry = dict(
             nnz0=new_s.layers[0].nnz,
             spills=new_s.spills,

@@ -40,7 +40,7 @@ def run(args) -> dict:
     lazy_l0 = fused if lazy_arg == "auto" else lazy_arg == "on"
     chunk = getattr(args, "chunk", 1)
     use_kernel = getattr(args, "use_kernel", False)
-    batch_mode = getattr(args, "batch_mode", "bucketed")
+    batch_mode = getattr(args, "batch_mode", "grouped")
     ingest = jax.jit(lambda s, r, c, v: stream.ingest_instances(
         s, r, c, v, fused=fused, lazy_l0=lazy_l0, chunk=chunk,
         use_kernel=use_kernel, batch_mode=batch_mode))
@@ -125,13 +125,16 @@ def main():
     ap.add_argument("--use-kernel", dest="use_kernel", action="store_true",
                     help="Pallas merge kernels (interpret mode off-TPU)")
     ap.add_argument("--batch-mode", dest="batch_mode",
-                    choices=("bucketed", "branchfree", "switch"),
-                    default="bucketed",
-                    help="instance-batched execution strategy: bucketed = "
-                    "plan all depths, branch once per step on the deepest "
-                    "(production default); branchfree = one masked merge "
-                    "per instance; switch = legacy vmapped lax.switch "
-                    "(executes every branch — the divergence A/B baseline)")
+                    choices=("grouped", "bucketed", "branchfree", "switch"),
+                    default="grouped",
+                    help="instance-batched execution strategy: grouped = "
+                    "plan all depths, execute per depth cohort so one deep "
+                    "instance pays only its own merge (production default); "
+                    "bucketed = branch once per step on the deepest "
+                    "(synchronized-fleet A/B baseline); branchfree = one "
+                    "masked merge per instance; switch = legacy vmapped "
+                    "lax.switch (executes every branch — the divergence "
+                    "A/B baseline)")
     args = ap.parse_args()
     out = run(args)
     print(f"sustained {out['updates_per_s']:,.0f} updates/s over "

@@ -215,16 +215,17 @@ def d4m_corrected(arch: str, shape: str, mesh: Mesh,
     for tp in (1, 2):
         def unrolled(states, rows, cols, vals, tp=tp):
             # the probe must price the PRODUCTION instance-batched layout:
-            # "bucketed" unrolls the batched plan-then-execute step (one
-            # batch-level branch per update), the other modes unroll the
-            # per-instance update under vmap with the configured strategy.
-            if cfg.fused and cfg.batch_mode == "bucketed":
+            # "grouped"/"bucketed" unroll the batched plan-then-execute
+            # step (per-depth-cohort loops / one batch-level branch per
+            # update), the other modes unroll the per-instance update under
+            # vmap with the configured strategy.
+            if cfg.fused and cfg.batch_mode in ("grouped", "bucketed"):
                 from repro.core import stream as stream_mod
                 for t in range(tp):
                     states = stream_mod.update_instances(
                         states, rows[:, t], cols[:, t], vals[:, t],
                         sr=sr_mod.PLUS_TIMES, use_kernel=cfg.use_kernel,
-                        lazy_l0=cfg.lazy_l0)
+                        lazy_l0=cfg.lazy_l0, batch_mode=cfg.batch_mode)
                 return states
 
             def one(h, r, c, v):

@@ -97,7 +97,7 @@ def main():
     ap.add_argument("--chunk", type=int, default=1)
     ap.add_argument("--use-kernel", dest="use_kernel", action="store_true")
     ap.add_argument("--batch-mode", dest="batch_mode",
-                    choices=("bucketed", "branchfree", "switch"),
+                    choices=("grouped", "bucketed", "branchfree", "switch"),
                     default=cfg.batch_mode)
     args = ap.parse_args()
     out = run(args)

@@ -10,9 +10,12 @@ which holds for every reduction here because ``sr.add`` across a key's
 per-layer copies is exactly the merge's combine (sum under plus.times;
 max/min are idempotent), and every contraction used (``reduce_rows``,
 ``reduce_cols``, ``spmv``, ``spmv_t``) is linear in that sense.  The lazy
-layer-0 append buffer needs no special data path — only the
-``indices_are_sorted`` hint must be dropped (its keys are unsorted and
-duplicated), which ``sorted=False`` does.
+layer-0 append buffer needs no special data path — but it IS a raw buffer,
+so layer 0 always reduces with ``sorted=False``: that drops the
+``indices_are_sorted`` hint (its keys are unsorted and duplicated) AND
+gates live slots by ``nnz`` (``assoc._live_slots``) instead of trusting
+slots past ``nnz`` to hold sentinel keys / zero values, matching the
+engine's ``_raw_point``/``extract_rows`` discipline.
 
 All functions are jit-safe and vmap-safe over the instance axis.
 """
@@ -49,8 +52,11 @@ def out_degrees(h, num_rows: int, sr: Semiring = sr_mod.PLUS_TIMES) -> Array:
 
 def in_degrees(h, num_cols: int, sr: Semiring = sr_mod.PLUS_TIMES) -> Array:
     """Per-column totals (weighted in-degrees under plus.times); ``lo`` is
-    the minor key so every layer reduces unsorted."""
-    parts = [assoc.reduce_cols(l, num_cols, sr) for l in h.layers]
+    the minor key so no layer earns the sorted-indices hint, but layer 0
+    still reduces as a RAW buffer (sorted=False) for the ``nnz`` live-slot
+    gate."""
+    parts = [assoc.reduce_cols(h.layers[0], num_cols, sr, sorted=False)]
+    parts += [assoc.reduce_cols(l, num_cols, sr) for l in h.layers[1:]]
     return _layer_combine(sr, parts)
 
 
@@ -61,13 +67,58 @@ def degree_vectors(h, num_rows: int, num_cols: int,
     return out_degrees(h, num_rows, sr), in_degrees(h, num_cols, sr)
 
 
+def row_occupancy(h, num_rows: int) -> Array:
+    """Number of live stored entries per row across every layer (layer 0
+    counted as a raw buffer, so duplicate keys count per slot).  Zero means
+    the row was never touched — the mask ``top_k_rows`` needs, because a
+    row's semiring TOTAL cannot distinguish "never updated" from "updates
+    summing to the add identity" (and under min-reduce semirings the
+    identity is +inf, which ``lax.top_k`` would rank first)."""
+    total = jnp.zeros((num_rows,), jnp.int32)
+    for i, l in enumerate(h.layers):
+        valid = assoc._live_slots(l, sorted=i > 0)
+        ids = jnp.where(valid, l.hi, num_rows)
+        total = total + jax.ops.segment_sum(
+            valid.astype(jnp.int32), ids,
+            num_segments=num_rows + 1)[:num_rows]
+    return total
+
+
 def top_k_rows(h, num_rows: int, k: int,
                sr: Semiring = sr_mod.PLUS_TIMES) -> Tuple[Array, Array]:
-    """Heavy hitters: the k rows with the largest semiring row total
-    (top talkers of the network traffic matrix).  Returns (totals, row
-    ids), both [k], ordered descending."""
+    """Heavy hitters: the k EXTREMAL live rows by semiring row total (top
+    talkers of the network traffic matrix).  Returns (totals, row ids),
+    both [k].
+
+    Untouched rows hold the semiring's add identity and are masked out via
+    ``row_occupancy`` — without the mask they poisoned the ranking twice:
+    under min-reduce semirings (min.plus) the identity is +inf, which
+    ``lax.top_k`` ranks as the LARGEST total, so "heavy hitters" returned
+    nothing but empty rows; and under plus.times a dead row's 0.0 outranked
+    every live row with a negative total.
+
+    Ordering follows the semiring's notion of extremal: descending totals
+    for sum/max reductions, ASCENDING for min reductions (min.plus heavy
+    hitters are the smallest accumulated totals — e.g. shortest observed
+    paths).  When fewer than ``k`` rows are live, the tail is padded with
+    the dtype's worst-ranked value (``-inf``/``+inf`` for floats, the
+    iinfo extremes for integer hierarchies — masking with a float inf
+    would silently promote exact integer totals to float32) and arbitrary
+    row ids.
+    """
     deg = out_degrees(h, num_rows, sr)
-    return jax.lax.top_k(deg, k)
+    live = row_occupancy(h, num_rows) > 0
+    if jnp.issubdtype(deg.dtype, jnp.integer):
+        info = jnp.iinfo(deg.dtype)
+        worst_max, worst_min = info.min, info.max
+    else:
+        worst_max, worst_min = -jnp.inf, jnp.inf
+    if sr_mod.reduce_kind(sr) == "min":
+        score = jnp.where(live, deg, jnp.asarray(worst_min, deg.dtype))
+        neg, ids = jax.lax.top_k(-score, k)
+        return -neg, ids
+    return jax.lax.top_k(
+        jnp.where(live, deg, jnp.asarray(worst_max, deg.dtype)), k)
 
 
 def spmv(h, x: Array, num_rows: int,
@@ -83,8 +134,10 @@ def spmv(h, x: Array, num_rows: int,
 
 def spmv_t(h, x: Array, num_cols: int,
            sr: Semiring = sr_mod.PLUS_TIMES) -> Array:
-    """y = A' (.) x against the live hierarchy (transpose contraction)."""
-    parts = [assoc.spmv_t(l, x, num_cols, sr) for l in h.layers]
+    """y = A' (.) x against the live hierarchy (transpose contraction);
+    layer 0 contracts as a RAW buffer (sorted=False)."""
+    parts = [assoc.spmv_t(h.layers[0], x, num_cols, sr, sorted=False)]
+    parts += [assoc.spmv_t(l, x, num_cols, sr) for l in h.layers[1:]]
     return _layer_combine(sr, parts)
 
 

@@ -4,7 +4,7 @@ The paper's point in sustaining 1.9B updates/s is to *analyze* streaming
 network data (arXiv:1907.04217) — which means the read path must run while
 the write path streams, without draining the hierarchy.  This module
 interleaves jitted ingest rounds (``stream.ingest_instances`` — the
-production bucketed layout) with jitted query batches (``engine`` point
+production depth-cohort grouped layout) with jitted query batches (``engine`` point
 lookups and ``analytics`` reductions, vmapped over the local instances)
 and reports both sides of the ledger: sustained updates/s, queries/s and
 per-batch query latency.  Because the engine never mutates or merges
@@ -34,7 +34,7 @@ Array = jax.Array
 def make_ingest_fn(sr: Semiring = sr_mod.PLUS_TIMES, *,
                    use_kernel: bool = False, lazy_l0: bool = False,
                    fused: bool = True, chunk: int = 1,
-                   batch_mode: str = "bucketed"):
+                   batch_mode: str = "grouped"):
     """Jitted (states, [I,T,B] stream) -> states round step (telemetry
     dropped so XLA can DCE it on the hot path).  The state is donated —
     matching ``distributed.sharded_ingest_fn`` — so each round updates the
@@ -75,7 +75,7 @@ def run_service(states, rows: Array, cols: Array, vals: Array,
                 sr: Semiring = sr_mod.PLUS_TIMES,
                 use_kernel: bool = False, lazy_l0: bool = False,
                 fused: bool = True, chunk: int = 1,
-                batch_mode: str = "bucketed",
+                batch_mode: str = "grouped",
                 l0_mode: str = "auto",
                 queries_per_round: int = 1,
                 analytics_num_rows: int = 0, analytics_k: int = 8,
@@ -90,6 +90,14 @@ def run_service(states, rows: Array, cols: Array, vals: Array,
     criterion compares against.  Returns (final states, stats dict).
     """
     I, T, B = rows.shape
+    if rounds < 2:
+        # round 0 is the untimed warmup/compile round: with rounds=1 the
+        # WHOLE stream ingests inside it and the loop below never runs, so
+        # the reported rates were silently 0.0 — refuse instead.
+        raise ValueError(
+            f"rounds must be >= 2 (round 0 is the untimed warmup round; "
+            f"rounds={rounds} would ingest the whole stream in it and "
+            f"report zero rates)")
     if T % rounds:
         raise ValueError(f"stream length {T} not divisible by rounds "
                          f"{rounds}")
@@ -114,7 +122,6 @@ def run_service(states, rows: Array, cols: Array, vals: Array,
     analytics_wall = 0.0      # top-k batches, kept separate so queries/s
     latencies = []            # is the point-lookup rate, not a blend
     n_queries = 0
-    out = None
     for rnd in range(1, rounds):
         sl = slice(rnd * per, (rnd + 1) * per)
         t0 = time.perf_counter()
@@ -124,8 +131,7 @@ def run_service(states, rows: Array, cols: Array, vals: Array,
         if with_queries:
             for _ in range(queries_per_round):
                 t0 = time.perf_counter()
-                out = query(states, q_rows, q_cols)
-                jax.block_until_ready(out)
+                jax.block_until_ready(query(states, q_rows, q_cols))
                 dt = time.perf_counter() - t0
                 query_wall += dt
                 latencies.append(dt)

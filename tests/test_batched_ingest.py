@@ -220,12 +220,177 @@ def test_sharded_ingest_batch_modes_agree():
     n_inst = 4
     R, C, V = _instance_streams(5, n_inst, 10, BLOCK, 50)
     outs = {}
-    for mode in ("bucketed", "switch"):
+    for mode in ("grouped", "bucketed", "switch"):
         states = distributed.create_instances(n_inst, CUTS, BLOCK)
         fn = distributed.sharded_ingest_fn(mesh, ("data",), lazy_l0=True,
                                            batch_mode=mode)
         outs[mode], _ = fn(states, R, C, V)
+    _assert_states_equal(outs["grouped"], outs["switch"], 50)
     _assert_states_equal(outs["bucketed"], outs["switch"], 50)
+
+
+# ------------------------------------------- desynchronized fleets ---------
+
+
+def _staggered_states(warm_blocks, lazy_l0=True):
+    """Fleet whose instance i is pre-warmed with ``warm_blocks[i]`` unique
+    blocks: occupancy — and so the planned spill depth of the NEXT update —
+    is phase-shifted per instance, the desynchronized-fleet regime."""
+    states_list = []
+    for n in warm_blocks:
+        h = hier.create(CUTS, BLOCK)
+        for t in range(n):
+            keys = jnp.arange(t * BLOCK, (t + 1) * BLOCK, dtype=jnp.int32)
+            h = hier.update(h, keys, keys, jnp.ones(BLOCK), lazy_l0=lazy_l0)
+        states_list.append(h)
+    return _stack(states_list)
+
+
+@pytest.mark.parametrize("lazy_l0", [False, True])
+def test_desynchronized_fleet_equivalence_matrix(lazy_l0):
+    """Streams engineered so instances plan DIFFERENT depths within the
+    same step (staggered occupancy phases): grouped == bucketed ==
+    branchfree == switch in contents AND per-instance telemetry, and all
+    match the layered oracle's contents/overflow/counters."""
+    warm = (0, 1, 2, 5)
+    n_inst, steps, nkeys = len(warm), 12, 60
+    states = _staggered_states(warm, lazy_l0=True)
+    depths = jax.vmap(hier._plan_spill_depth, in_axes=(0, None))(
+        states, BLOCK)
+    assert len(np.unique(np.asarray(depths))) > 1   # really desynchronized
+    R, C, V = _instance_streams(8, n_inst, steps, BLOCK, nkeys)
+
+    outs, telems = {}, {}
+    for mode in stream.BATCH_MODES:
+        f = jax.jit(lambda s, r, c, v, m=mode: stream.ingest_instances(
+            s, r, c, v, lazy_l0=lazy_l0, batch_mode=m))
+        outs[mode], telems[mode] = f(states, R, C, V)
+    layered, _ = stream.ingest_instances(states, R, C, V, fused=False,
+                                         lazy_l0=lazy_l0)
+
+    ref = outs["switch"]
+    assert np.asarray(ref.spills).sum() > 0
+    for mode in ("grouped", "bucketed", "branchfree"):
+        _assert_states_equal(outs[mode], ref, nkeys)
+        for key in ("nnz0", "spills", "overflow"):
+            np.testing.assert_array_equal(
+                np.asarray(telems[mode][key]),
+                np.asarray(telems["switch"][key]), err_msg=f"{mode}:{key}")
+    for i in range(n_inst):
+        np.testing.assert_allclose(_dense(_inst(outs["grouped"], i), nkeys),
+                                   _dense(_inst(layered, i), nkeys),
+                                   rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(outs["grouped"].overflow),
+                                  np.asarray(layered.overflow))
+    np.testing.assert_array_equal(np.asarray(outs["grouped"].n_updates),
+                                  np.asarray(layered.n_updates))
+
+
+def test_one_deep_rest_append_extreme():
+    """THE desynchronization failure mode: one instance plans a deep merge
+    while every other instance appends.  The grouped layout must equal the
+    per-instance oracle, keep the append cohort's layer 0 advancing by raw
+    slots (proof no merge touched them), and really consume the deep
+    instance's shallow layers."""
+    states = _staggered_states((8, 0, 0, 0))
+    n_inst = 4
+    depths = jax.vmap(hier._plan_spill_depth, in_axes=(0, None))(
+        states, BLOCK)
+    np.testing.assert_array_equal(np.asarray(depths), [2, 0, 0, 0])
+
+    rng = np.random.default_rng(9)
+    r = jnp.asarray(rng.integers(0, 500, (n_inst, BLOCK)), jnp.int32)
+    v = jnp.ones((n_inst, BLOCK), jnp.float32)
+    nnz0_before = np.asarray(states.layers[0].nnz)
+
+    for mode in ("grouped", "bucketed"):
+        out = stream.update_instances(states, r, r, v, lazy_l0=True,
+                                      batch_mode=mode)
+        oracle = _stack([
+            hier.update(_inst(states, i), r[i], r[i], v[i], lazy_l0=True,
+                        batch_mode="switch") for i in range(n_inst)])
+        _assert_states_equal(out, oracle, 500)
+        nnz = np.asarray(out.nnz_per_layer())            # [L, I]
+        np.testing.assert_array_equal(nnz[0, 1:], nnz0_before[1:] + BLOCK)
+        assert np.all(nnz[:2, 0] == 0)                   # layers 0,1 consumed
+
+
+def test_all_deep_extreme():
+    """Every instance plans the same deep depth at once (the synchronized
+    worst case): the grouped cohort loop must drain the WHOLE batch and
+    agree with bucketed and the per-instance oracle."""
+    states = _staggered_states((8, 8, 8, 8))
+    n_inst = 4
+    depths = jax.vmap(hier._plan_spill_depth, in_axes=(0, None))(
+        states, BLOCK)
+    np.testing.assert_array_equal(np.asarray(depths), [2, 2, 2, 2])
+
+    rng = np.random.default_rng(10)
+    r = jnp.asarray(rng.integers(0, 500, (n_inst, BLOCK)), jnp.int32)
+    v = jnp.ones((n_inst, BLOCK), jnp.float32)
+    grouped = stream.update_instances(states, r, r, v, lazy_l0=True,
+                                      batch_mode="grouped")
+    bucketed = stream.update_instances(states, r, r, v, lazy_l0=True,
+                                       batch_mode="bucketed")
+    oracle = _stack([
+        hier.update(_inst(states, i), r[i], r[i], v[i], lazy_l0=True,
+                    batch_mode="switch") for i in range(n_inst)])
+    _assert_states_equal(grouped, bucketed, 500)
+    _assert_states_equal(grouped, oracle, 500)
+
+
+@pytest.mark.parametrize("batch_mode", ["grouped", "bucketed"])
+@pytest.mark.parametrize("lazy_l0", [False, True])
+def test_masked_blocks_update_instances(batch_mode, lazy_l0):
+    """Masked blocks through the batched layouts (including an all-masked
+    instance): planned and counted at sum(mask) per instance, equal to the
+    per-instance switch oracle."""
+    warm = (0, 2, 5)
+    n_inst, nkeys = len(warm), 30
+    states = _staggered_states(warm, lazy_l0=lazy_l0)
+    rng = np.random.default_rng(11)
+    r = jnp.asarray(rng.integers(0, nkeys, (n_inst, BLOCK)), jnp.int32)
+    c = jnp.asarray(rng.integers(0, nkeys, (n_inst, BLOCK)), jnp.int32)
+    v = jnp.ones((n_inst, BLOCK), jnp.float32)
+    m = jnp.asarray([[1, 0, 1, 0, 0, 1, 0, 0],
+                     [0, 0, 0, 0, 0, 0, 0, 0],
+                     [1, 1, 1, 1, 1, 1, 1, 1]], bool)
+
+    out = stream.update_instances(states, r, c, v, lazy_l0=lazy_l0,
+                                  batch_mode=batch_mode, mask=m)
+    oracle = _stack([
+        hier.update(_inst(states, i), r[i], c[i], v[i], mask=m[i],
+                    lazy_l0=lazy_l0, batch_mode="switch")
+        for i in range(n_inst)])
+    _assert_states_equal(out, oracle, nkeys)
+    assert int(out.n_updates[0]) == int(states.n_updates[0]) + 3
+    assert int(out.n_updates[1]) == int(states.n_updates[1])
+
+
+@pytest.mark.parametrize("batch_mode", ["grouped", "bucketed"])
+@pytest.mark.parametrize("lazy_l0", [False, True])
+def test_masked_wide_blocks_update_instances(batch_mode, lazy_l0):
+    """Masked block WIDER than the creation block size: the one shape whose
+    append can physically clobber (``may_not_fit`` in the batched layouts'
+    depth-0 pass must run the dynamic fit check), against the per-instance
+    switch oracle."""
+    warm = (0, 3, 6)
+    n_inst, nkeys, wide = len(warm), 40, 2 * BLOCK
+    states = _staggered_states(warm, lazy_l0=lazy_l0)
+    assert wide > states.layers[0].hi.shape[-1] - CUTS[0]   # may_not_fit
+    rng = np.random.default_rng(12)
+    r = jnp.asarray(rng.integers(0, nkeys, (n_inst, wide)), jnp.int32)
+    c = jnp.asarray(rng.integers(0, nkeys, (n_inst, wide)), jnp.int32)
+    v = jnp.ones((n_inst, wide), jnp.float32)
+    m = jnp.asarray(rng.integers(0, 2, (n_inst, wide)), bool)
+
+    out = stream.update_instances(states, r, c, v, lazy_l0=lazy_l0,
+                                  batch_mode=batch_mode, mask=m)
+    oracle = _stack([
+        hier.update(_inst(states, i), r[i], c[i], v[i], mask=m[i],
+                    lazy_l0=lazy_l0, batch_mode="switch")
+        for i in range(n_inst)])
+    _assert_states_equal(out, oracle, nkeys)
 
 
 def test_update_instances_validates_lazy_semiring():
@@ -239,6 +404,8 @@ def test_update_instances_validates_lazy_semiring():
     with pytest.raises(ValueError, match="plus.times"):
         stream.update_instances(states, r, r, v, sr=semiring.MIN_PLUS,
                                 lazy_l0=True)
+    with pytest.raises(ValueError, match="batch_mode"):
+        stream.update_instances(states, r, r, v, batch_mode="switch")
 
 
 # ------------------------------------------------------- 64-bit counters ----

@@ -308,10 +308,142 @@ def test_top_k_rows_are_the_heavy_hitters():
     h, merged = _case("plus.times", True, False, dup_heavy=True)
     deg = np.asarray(assoc.reduce_rows(merged, NKEYS))
     totals, ids = analytics.top_k_rows(h, NKEYS, 4)
-    order = np.argsort(-deg, kind="stable")[:4]
+    # rows never touched are masked out of the ranking (they'd tie live
+    # rows at the 0.0 add identity otherwise) — the oracle must mask too
+    nnz = int(merged.nnz)
+    live = np.isin(np.arange(NKEYS), np.asarray(merged.hi)[:nnz])
+    score = np.where(live, deg, -np.inf)
+    order = np.argsort(-score, kind="stable")[:4]
     np.testing.assert_allclose(np.asarray(totals), deg[order], rtol=1e-5)
     assert set(int(i) for i in ids) == set(int(i) for i in order) \
         or np.allclose(deg[np.asarray(ids)], deg[order], rtol=1e-5)
+
+
+def test_top_k_rows_min_semiring_masks_identity_rows():
+    """min.plus heavy hitters: the add identity is +inf, which lax.top_k
+    ranked FIRST — top_k_rows used to return nothing but untouched rows.
+    Live rows must win, ranked by smallest total, and a k past the live
+    row count pads with +inf."""
+    sr = semiring.MIN_PLUS
+    h = hier.create((16, 64, 512), block_size=8, sr=sr)
+    r = jnp.asarray([3, 3, 5, 5, 5, 3, 3, 5], jnp.int32)
+    c = jnp.arange(8, dtype=jnp.int32)
+    v = jnp.asarray([5., 2., 7., 1., 9., 4., 8., 3.], jnp.float32)
+    h = hier.update(h, r, c, v, sr=sr)
+
+    totals, ids = analytics.top_k_rows(h, 10, 2, sr=sr)
+    assert sorted(int(i) for i in ids) == [3, 5]
+    np.testing.assert_allclose(np.sort(np.asarray(totals)), [1.0, 2.0])
+    assert np.all(np.isfinite(np.asarray(totals)))
+    # ascending: the min-semiring extremal row leads
+    assert float(totals[0]) <= float(totals[1])
+
+    totals4, _ = analytics.top_k_rows(h, 10, 4, sr=sr)
+    assert np.all(np.asarray(totals4)[2:] == np.inf)     # dead-row padding
+
+
+def test_top_k_rows_dead_rows_never_outrank_negative_live_rows():
+    """plus.times with negative totals: a dead row's 0.0 identity used to
+    outrank every live row that summed negative."""
+    h = hier.create((16, 64, 512), block_size=8, sr=semiring.PLUS_TIMES)
+    r = jnp.asarray([2, 2, 4, 4, 2, 4, 2, 4], jnp.int32)
+    c = jnp.arange(8, dtype=jnp.int32)
+    v = jnp.asarray([-2., -1., -.5, -.25, -1., -.125, -1., -.125],
+                    jnp.float32)
+    h = hier.update(h, r, c, v)
+    totals, ids = analytics.top_k_rows(h, 10, 2)
+    assert sorted(int(i) for i in ids) == [2, 4]
+    assert np.all(np.asarray(totals) < 0)
+
+
+def test_top_k_rows_integer_dtype_stays_exact():
+    """Integer hierarchies must keep exact integer totals: masking dead
+    rows with a float inf would promote int32 to float32 and corrupt
+    totals above 2^24."""
+    h = hier.create((16, 64), block_size=8, dtype=jnp.int32)
+    r = jnp.full((8,), 1, jnp.int32)
+    c = jnp.arange(8, dtype=jnp.int32)
+    v = jnp.full((8,), (1 << 24) // 4 + 1, jnp.int32)
+    h = hier.update(h, r, c, v)
+    totals, ids = analytics.top_k_rows(h, 4, 2)
+    assert totals.dtype == jnp.int32
+    assert int(totals[0]) == 8 * ((1 << 24) // 4 + 1)    # odd-exact > 2^24
+    assert int(ids[0]) == 1
+    assert int(totals[1]) == np.iinfo(np.int32).min      # dead-row padding
+
+
+def test_analytics_past_layer0_spill_match_flush_oracle():
+    """Satellite regression (ISSUE 5): ingest PAST a layer-0 spill — the
+    lazy buffer is spill-cleared and refilled mid-stream — then every
+    analytics reduction must match the flush-then-merge oracle."""
+    for sr, lazy_l0, use_kernel in ((semiring.PLUS_TIMES, True, False),
+                                    (semiring.PLUS_TIMES, False, False),
+                                    (semiring.MAX_PLUS, False, False)):
+        h = _ingested(sr, lazy_l0, use_kernel, seed=11)
+        assert int(np.asarray(h.spills)[0]) > 0          # really spilled
+        flushed = hier.flush(h, sr, use_kernel=use_kernel,
+                             lazy_l0=lazy_l0).layers[-1]
+        x = jnp.asarray(np.random.default_rng(12).normal(size=(NKEYS,)),
+                        jnp.float32)
+        checks = [
+            (analytics.out_degrees(h, NKEYS, sr),
+             assoc.reduce_rows(flushed, NKEYS, sr)),
+            (analytics.in_degrees(h, NKEYS, sr),
+             assoc.reduce_cols(flushed, NKEYS, sr)),
+            (analytics.spmv(h, x, NKEYS, sr),
+             assoc.spmv(flushed, x, NKEYS, sr)),
+            (analytics.spmv_t(h, x, NKEYS, sr),
+             assoc.spmv_t(flushed, x, NKEYS, sr)),
+            (analytics.ata_correlation(h, x, NKEYS, NKEYS, sr),
+             assoc.spmv_t(flushed, assoc.spmv(flushed, x, NKEYS, sr),
+                          NKEYS, sr)),
+        ]
+        for got, want in checks:
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=1e-4, atol=1e-4)
+
+
+def test_analytics_ignore_dirty_raw_tail():
+    """The raw-buffer contract is nnz, NOT the sentinel tail.  Every
+    in-repo ingest path happens to leave slots past nnz sentinel-clean
+    (verified in PR 5), but an externally restored or hand-built state need
+    not — plant garbage past the lazy buffer's nnz and the analytics
+    reductions must not read it (the engine's _raw_point never did)."""
+    h = _ingested(semiring.PLUS_TIMES, True, False, seed=13)
+    l0 = h.layers[0]
+    nnz = int(l0.nnz)
+    assert nnz < l0.capacity                             # room for garbage
+    tail = jnp.arange(l0.capacity) >= nnz
+    dirty_l0 = assoc.AssocSegment(
+        hi=jnp.where(tail, 1, l0.hi),                    # live-looking keys
+        lo=jnp.where(tail, 2, l0.lo),
+        val=jnp.where(tail, jnp.float32(1e6), l0.val),
+        nnz=l0.nnz)
+    dirty = dataclasses.replace(h, layers=(dirty_l0,) + h.layers[1:])
+    x = jnp.asarray(np.random.default_rng(14).normal(size=(NKEYS,)),
+                    jnp.float32)
+    pairs = [
+        (analytics.out_degrees(dirty, NKEYS), analytics.out_degrees(h, NKEYS)),
+        (analytics.in_degrees(dirty, NKEYS), analytics.in_degrees(h, NKEYS)),
+        (analytics.spmv(dirty, x, NKEYS), analytics.spmv(h, x, NKEYS)),
+        (analytics.spmv_t(dirty, x, NKEYS), analytics.spmv_t(h, x, NKEYS)),
+        (analytics.top_k_rows(dirty, NKEYS, 4)[0],
+         analytics.top_k_rows(h, NKEYS, 4)[0]),
+    ]
+    for got, want in pairs:
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=0)
+
+
+def test_service_rejects_single_round():
+    """rounds=1 used to ingest the ENTIRE stream inside the untimed warmup
+    round and report 0.0 updates/s and queries/s — now a hard error."""
+    states = distributed.create_instances(1, (16, 64), 4)
+    r = jnp.zeros((1, 2, 4), jnp.int32)
+    v = jnp.ones((1, 2, 4), jnp.float32)
+    q = jnp.zeros((3,), jnp.int32)
+    with pytest.raises(ValueError, match="rounds"):
+        service.run_service(states, r, r, v, q, q, rounds=1)
 
 
 def test_masked_blocks_in_all_knobs():
