@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
+from repro import stages
 from repro.compat import NamedSharding, P, shard_map
 from repro.core import hier, stream
 from repro.core import semiring as sr_mod
@@ -85,6 +86,10 @@ def sharded_ingest_fn(mesh: Mesh, data_axes: Tuple[str, ...],
     either.  ``"bucketed"`` is the PR-3 branch-on-deepest layout (the
     synchronized-fleet A/B baseline).
     """
+    sig = stages.signature_of(sr=sr, use_kernel=use_kernel, lazy_l0=lazy_l0,
+                              fused=fused, chunk=chunk,
+                              batch_mode=batch_mode, mesh=mesh,
+                              data_axes=data_axes)
     spec = P(data_axes)
 
     @partial(shard_map, mesh=mesh, in_specs=(spec, spec, spec, spec),
@@ -95,7 +100,8 @@ def sharded_ingest_fn(mesh: Mesh, data_axes: Tuple[str, ...],
                                        fused=fused, chunk=chunk,
                                        batch_mode=batch_mode)
 
-    return jax.jit(dist_ingest, donate_argnums=(0,))
+    return stages.wrap(dist_ingest, "distributed.sharded_ingest_fn", sig,
+                       donate_argnums=(0,))
 
 
 def _mesh_semiring_combine(sr: Semiring, x: Array, axis_name: str) -> Array:
@@ -129,6 +135,9 @@ def sharded_query_fn(mesh: Mesh, data_axes: Tuple[str, ...],
     """
     from repro.query import engine
 
+    sig = stages.signature_of(sr=sr, use_kernel=use_kernel, l0_mode=l0_mode,
+                              mesh=mesh, data_axes=data_axes,
+                              extra=(("per_instance", per_instance),))
     spec = P(data_axes)
     out_spec = spec if per_instance else P()
 
@@ -146,7 +155,7 @@ def sharded_query_fn(mesh: Mesh, data_axes: Tuple[str, ...],
             local = _mesh_semiring_combine(sr, local, ax)
         return local
 
-    return jax.jit(dist_query)
+    return stages.wrap(dist_query, "distributed.sharded_query_fn", sig)
 
 
 def global_degree_histogram_fn(mesh: Mesh, data_axes: Tuple[str, ...],
@@ -179,7 +188,11 @@ def global_degree_histogram_fn(mesh: Mesh, data_axes: Tuple[str, ...],
             local = jax.lax.psum(local, ax)
         return local
 
-    return jax.jit(histogram)
+    sig = stages.signature_of(sr=sr, mesh=mesh, data_axes=data_axes,
+                              extra=(("num_rows", int(num_rows)),
+                                     ("num_bins", int(num_bins))))
+    return stages.wrap(histogram, "distributed.global_degree_histogram",
+                       sig)
 
 
 def aggregate_update_counts_fn(mesh: Mesh, data_axes: Tuple[str, ...]):
@@ -215,7 +228,9 @@ def aggregate_update_counts_fn(mesh: Mesh, data_axes: Tuple[str, ...]):
             parts = jax.lax.psum(parts, ax)
         return parts
 
-    jitted = jax.jit(count_parts)
+    jitted = stages.wrap(count_parts, "distributed.aggregate_update_counts",
+                         stages.signature_of(mesh=mesh,
+                                             data_axes=data_axes))
 
     def count(states):
         import numpy as np

@@ -43,6 +43,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import stages
 from repro.core import assoc
 from repro.core import semiring as sr_mod
 from repro.core.assoc import AssocSegment
@@ -526,34 +527,46 @@ def update(h: HierAssoc, rows: Array, cols: Array, vals: Array,
     ``core.stream.ingest_instances(batch_mode="grouped")``, which adds
     batch-level depth-cohort grouping on top.
     """
-    if lazy_l0 and sr.name != "plus.times":
-        raise ValueError("lazy_l0 requires the plus.times semiring")
-    if batch_mode not in ("switch", "branchfree"):
-        raise ValueError(f"batch_mode must be 'switch' or 'branchfree', "
-                         f"got {batch_mode!r}")
-    if fused:
-        return _update_fused(h, rows, cols, vals, mask, sr, use_kernel,
-                             lazy_l0, batch_mode=batch_mode)
-    merged, ovf0 = assoc.from_coo(rows, cols, vals, rows.shape[-1], sr,
-                                  mask=mask)
-    if lazy_l0:
-        # merged is canonical (live prefix, sentinel tail): advance the
-        # buffer by its unique count, not the physical block width.
-        layer0, ovf1 = _lazy_append(h.layers[0], merged.hi, merged.lo,
-                                    merged.val, n_live=merged.nnz)
-    else:
-        layer0, ovf1 = _merge(h.layers[0], merged, h.layers[0].capacity, sr,
-                              use_kernel)
-    n_new = rows.shape[-1] if mask is None else jnp.sum(mask)
-    lo, hi = _bump_counter(h.n_updates, h.n_updates_hi, jnp.int32(n_new))
-    h = dataclasses.replace(
-        h,
-        layers=(layer0,) + h.layers[1:],
-        overflow=h.overflow + ovf0 + ovf1,
-        n_updates=lo,
-        n_updates_hi=hi,
-    )
-    return _cascade(h, sr, use_kernel, lazy_l0)
+    sig = stages.signature_for_state(
+        h, sr=sr, use_kernel=use_kernel, lazy_l0=lazy_l0, fused=fused,
+        batch_mode=batch_mode,
+        allowed_batch_modes=("switch", "branchfree"))
+    return update_wrapped(sig)(h, rows, cols, vals, mask)
+
+
+def update_wrapped(sig: stages.Signature) -> stages.Wrapped:
+    """Keyed block-update program for one config signature (the staged
+    front door ``update`` routes through; ``stages.precompile_fleet``
+    warms it directly)."""
+    sr = sr_mod.get(sig.sr)
+    use_kernel, lazy_l0 = sig.use_kernel, sig.lazy_l0
+
+    def run(h, rows, cols, vals, mask):
+        if sig.fused:
+            return _update_fused(h, rows, cols, vals, mask, sr, use_kernel,
+                                 lazy_l0, batch_mode=sig.batch_mode)
+        merged, ovf0 = assoc.from_coo(rows, cols, vals, rows.shape[-1], sr,
+                                      mask=mask)
+        if lazy_l0:
+            # merged is canonical (live prefix, sentinel tail): advance the
+            # buffer by its unique count, not the physical block width.
+            layer0, ovf1 = _lazy_append(h.layers[0], merged.hi, merged.lo,
+                                        merged.val, n_live=merged.nnz)
+        else:
+            layer0, ovf1 = _merge(h.layers[0], merged,
+                                  h.layers[0].capacity, sr, use_kernel)
+        n_new = rows.shape[-1] if mask is None else jnp.sum(mask)
+        lo, hi = _bump_counter(h.n_updates, h.n_updates_hi, jnp.int32(n_new))
+        h2 = dataclasses.replace(
+            h,
+            layers=(layer0,) + h.layers[1:],
+            overflow=h.overflow + ovf0 + ovf1,
+            n_updates=lo,
+            n_updates_hi=hi,
+        )
+        return _cascade(h2, sr, use_kernel, lazy_l0)
+
+    return stages.wrap(run, "hier.update", sig)
 
 
 def query_all(h: HierAssoc, sr: Semiring = sr_mod.PLUS_TIMES,
@@ -570,6 +583,24 @@ def query_all(h: HierAssoc, sr: Semiring = sr_mod.PLUS_TIMES,
     reference path; it needs ``lazy_l0=True`` when the hierarchy is operated
     with lazy layer-0 appends so the buffer is merged as raw data.
     """
+    sig = stages.signature_for_state(h, sr=sr, use_kernel=use_kernel,
+                                     lazy_l0=lazy_l0, fused=fused)
+    return query_all_wrapped(sig)(h)
+
+
+def query_all_wrapped(sig: stages.Signature) -> stages.Wrapped:
+    """Keyed merge-all-layers program for one config signature."""
+    sr = sr_mod.get(sig.sr)
+    use_kernel, lazy_l0, fused = sig.use_kernel, sig.lazy_l0, sig.fused
+
+    def run(h):
+        return _query_all_body(h, sr, use_kernel, lazy_l0, fused)
+
+    return stages.wrap(run, "hier.query_all", sig)
+
+
+def _query_all_body(h: HierAssoc, sr: Semiring, use_kernel: bool,
+                    lazy_l0: bool, fused: bool) -> AssocSegment:
     cap = sum(h.capacities)
     l0 = h.layers[0]
     if fused:
@@ -674,6 +705,24 @@ def flush(h: HierAssoc, sr: Semiring = sr_mod.PLUS_TIMES,
     paths: a spill event per non-empty source layer and the ``spills[-1]``
     pressure bump when the drained last layer exceeds its cut.
     """
+    sig = stages.signature_for_state(h, sr=sr, use_kernel=use_kernel,
+                                     lazy_l0=lazy_l0, fused=fused)
+    return flush_wrapped(sig)(h)
+
+
+def flush_wrapped(sig: stages.Signature) -> stages.Wrapped:
+    """Keyed force-spill program for one config signature."""
+    sr = sr_mod.get(sig.sr)
+    use_kernel, lazy_l0, fused = sig.use_kernel, sig.lazy_l0, sig.fused
+
+    def run(h):
+        return _flush_body(h, sr, use_kernel, lazy_l0, fused)
+
+    return stages.wrap(run, "hier.flush", sig)
+
+
+def _flush_body(h: HierAssoc, sr: Semiring, use_kernel: bool,
+                lazy_l0: bool, fused: bool) -> HierAssoc:
     if fused:
         return _flush_fused(h, sr, use_kernel)
     layers = list(h.layers)

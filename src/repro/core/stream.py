@@ -44,6 +44,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import stages
 from repro.core import assoc, hier
 from repro.core import semiring as sr_mod
 from repro.core.hier import HierAssoc
@@ -51,7 +52,9 @@ from repro.core.semiring import Semiring
 
 Array = jax.Array
 
-BATCH_MODES = ("grouped", "bucketed", "branchfree", "switch")
+# canonical knob domain lives in repro/stages.py (the shared signature
+# canonicalizer); re-exported here for existing importers
+BATCH_MODES = stages.BATCH_MODES
 
 
 def _chunk_stream(rows: Array, cols: Array, vals: Array, chunk: int,
@@ -119,28 +122,40 @@ def ingest(h: HierAssoc, rows: Array, cols: Array, vals: Array,
     per-update view rides along under ``telem["per_update"]``), so spill
     curves from different chunk settings overlay correctly.
     """
-    if batch_mode not in ("switch", "branchfree"):
-        raise ValueError(f"ingest batch_mode must be 'switch' or "
-                         f"'branchfree', got {batch_mode!r}")
-    if chunk > 1:
-        rows, cols, vals = _chunk_stream(
-            rows, cols, vals, chunk, fused,
-            h.layers[0].capacity - h.cuts[0])
+    sig = stages.signature_for_state(
+        h, sr=sr, use_kernel=use_kernel, lazy_l0=lazy_l0, fused=fused,
+        chunk=chunk, batch_mode=batch_mode,
+        allowed_batch_modes=("switch", "branchfree"))
+    return _ingest_wrapped(sig)(h, rows, cols, vals)
 
-    def step(state: HierAssoc, block):
-        r, c, v = block
-        new_state = hier.update(state, r, c, v, sr=sr, use_kernel=use_kernel,
-                                lazy_l0=lazy_l0, fused=fused,
-                                batch_mode=batch_mode)
-        telemetry = dict(
-            nnz0=new_state.layers[0].nnz,
-            spills=new_state.spills,
-            overflow=new_state.overflow,
-        )
-        return new_state, telemetry
 
-    final, telem = jax.lax.scan(step, h, (rows, cols, vals))
-    return final, _normalize_chunked_telemetry(telem, chunk)
+def _ingest_wrapped(sig: stages.Signature) -> stages.Wrapped:
+    """Keyed single-instance scan-ingest program for one config signature."""
+    sr = sr_mod.get(sig.sr)
+
+    def run(h, rows, cols, vals):
+        if sig.chunk > 1:
+            rows, cols, vals = _chunk_stream(
+                rows, cols, vals, sig.chunk, sig.fused,
+                h.layers[0].capacity - h.cuts[0])
+
+        def step(state: HierAssoc, block):
+            r, c, v = block
+            new_state = hier.update(state, r, c, v, sr=sr,
+                                    use_kernel=sig.use_kernel,
+                                    lazy_l0=sig.lazy_l0, fused=sig.fused,
+                                    batch_mode=sig.batch_mode)
+            telemetry = dict(
+                nnz0=new_state.layers[0].nnz,
+                spills=new_state.spills,
+                overflow=new_state.overflow,
+            )
+            return new_state, telemetry
+
+        final, telem = jax.lax.scan(step, h, (rows, cols, vals))
+        return final, _normalize_chunked_telemetry(telem, sig.chunk)
+
+    return stages.wrap(run, "stream.ingest", sig)
 
 
 def ingest_jit(cuts: Tuple[int, ...], block_size: int, dtype=jnp.float32,
@@ -150,33 +165,30 @@ def ingest_jit(cuts: Tuple[int, ...], block_size: int, dtype=jnp.float32,
                fused: bool = True,
                chunk: int = 1,
                batch_mode: str = "switch"):
-    """Build a jitted (state, stream) -> (state, telemetry) ingest fn.
+    """Build a staged (state, stream) -> (state, telemetry) ingest fn.
 
     ``cuts``/``block_size``/``dtype`` pin the hierarchy geometry the
-    returned function is specialized to; mismatched states or streams fail
-    fast at trace time instead of silently ingesting with the wrong
-    configuration.
+    returned function is specialized to; knob validation routes through the
+    shared ``stages.signature_of`` canonicalizer (one error message at
+    every entry point) and mismatched states or streams fail fast at
+    lower/trace time via ``stages.check_state`` instead of silently
+    ingesting with the wrong configuration.
     """
-    cuts = tuple(cuts)
-    caps = hier.layer_capacities(cuts, block_size)
-    dtype = jnp.dtype(dtype)
+    sig = stages.signature_of(
+        cuts=cuts, block_size=block_size, dtype=dtype, sr=sr,
+        use_kernel=use_kernel, lazy_l0=lazy_l0, fused=fused, chunk=chunk,
+        batch_mode=batch_mode,
+        allowed_batch_modes=("switch", "branchfree"))
+    sr_obj = sr_mod.get(sig.sr)
 
     def run(h, rows, cols, vals):
-        if tuple(h.cuts) != cuts:
-            raise ValueError(f"state cuts {h.cuts} != configured {cuts}")
-        if h.capacities != caps:
-            raise ValueError(f"state capacities {h.capacities} != {caps} "
-                             f"(block_size {block_size})")
-        if h.layers[0].dtype != dtype:
-            raise ValueError(f"state dtype {h.layers[0].dtype} != {dtype}")
-        if rows.shape[-1] != block_size:
-            raise ValueError(f"stream block {rows.shape[-1]} != configured "
-                             f"block_size {block_size}")
-        return ingest(h, rows, cols, vals, sr=sr, use_kernel=use_kernel,
-                      lazy_l0=lazy_l0, fused=fused, chunk=chunk,
-                      batch_mode=batch_mode)
+        stages.check_state(sig, h, block=rows.shape[-1])
+        return ingest(h, rows, cols, vals, sr=sr_obj,
+                      use_kernel=sig.use_kernel, lazy_l0=sig.lazy_l0,
+                      fused=sig.fused, chunk=sig.chunk,
+                      batch_mode=sig.batch_mode)
 
-    return jax.jit(run)
+    return stages.wrap(run, "stream.ingest_jit", sig)
 
 
 def _select_depth0_leaves(states: HierAssoc, s0: HierAssoc, take0: Array
@@ -331,11 +343,28 @@ def update_instances(states: HierAssoc, rows: Array, cols: Array, vals: Array,
     spills, overflow and update counters (tests/test_batched_ingest.py).
     Zero collectives: under ``shard_map`` every predicate is per-device.
     """
-    if lazy_l0 and sr.name != "plus.times":
-        raise ValueError("lazy_l0 requires the plus.times semiring")
-    if batch_mode not in ("grouped", "bucketed"):
-        raise ValueError(f"update_instances batch_mode must be 'grouped' or "
-                         f"'bucketed', got {batch_mode!r}")
+    sig = stages.signature_for_state(
+        states, sr=sr, use_kernel=use_kernel, lazy_l0=lazy_l0,
+        batch_mode=batch_mode, allowed_batch_modes=("grouped", "bucketed"),
+        extra=(("masked", mask is not None),))
+    return stages.dispatch(
+        "stream.update_instances", sig,
+        lambda: _update_instances_impl(sig), states, rows, cols, vals, mask)
+
+
+def _update_instances_impl(sig: stages.Signature):
+    sr = sr_mod.get(sig.sr)
+    use_kernel, lazy_l0 = sig.use_kernel, sig.lazy_l0
+    batch_mode = sig.batch_mode
+
+    def run(states, rows, cols, vals, mask):
+        return _update_instances_body(states, rows, cols, vals, sr,
+                                      use_kernel, lazy_l0, batch_mode, mask)
+    return run
+
+
+def _update_instances_body(states, rows, cols, vals, sr, use_kernel,
+                           lazy_l0, batch_mode, mask):
     B = rows.shape[-1]
     L = len(states.cuts)
     caps0 = states.layers[0].hi.shape[-1]
@@ -402,9 +431,43 @@ def ingest_instances(states: HierAssoc, rows: Array, cols: Array, vals: Array,
     All modes return identical states and per-instance telemetry
     ([I, T, ...], per-input-block units under ``chunk``).
     """
-    if batch_mode not in BATCH_MODES:
-        raise ValueError(f"batch_mode must be one of {BATCH_MODES}, "
-                         f"got {batch_mode!r}")
+    sig = stages.signature_for_state(
+        states, sr=sr, use_kernel=use_kernel, lazy_l0=lazy_l0, fused=fused,
+        chunk=chunk, batch_mode=batch_mode)
+    return ingest_instances_jit(sig)(states, rows, cols, vals)
+
+
+def ingest_instances_jit(sig: stages.Signature = None, *,
+                         with_telemetry: bool = True, donate: bool = False,
+                         **knobs) -> stages.Wrapped:
+    """Staged (states, [I,T,B] stream) -> (states[, telemetry]) program.
+
+    The ONE builder behind every instance-batched ingest dispatch —
+    ``ingest_instances`` itself, ``launch/ingest.py``, the benchmarks, and
+    ``query.service.make_ingest_fn`` (which passes ``with_telemetry=False,
+    donate=True`` so XLA DCEs the telemetry and updates the fleet state in
+    place) — so they all share one cache entry per config signature and
+    ``stages.precompile_fleet`` can warm exactly the programs the CLIs will
+    dispatch.  Build it from an existing ``Signature`` or from knob kwargs
+    (``cuts``/``sr``/``lazy_l0``/...).
+    """
+    if sig is None:
+        sig = stages.signature_of(**knobs)
+    sr = sr_mod.get(sig.sr)
+
+    def run(states, rows, cols, vals):
+        out = _ingest_instances_body(states, rows, cols, vals, sr, sig)
+        return out if with_telemetry else out[0]
+
+    return stages.wrap(run, "stream.ingest_instances", sig,
+                       static=(("telemetry", with_telemetry),),
+                       donate_argnums=(0,) if donate else None)
+
+
+def _ingest_instances_body(states, rows, cols, vals, sr: Semiring,
+                           sig: stages.Signature):
+    use_kernel, lazy_l0 = sig.use_kernel, sig.lazy_l0
+    fused, chunk, batch_mode = sig.fused, sig.chunk, sig.batch_mode
     if not fused or batch_mode in ("switch", "branchfree"):
         return jax.vmap(
             lambda h, r, c, v: ingest(

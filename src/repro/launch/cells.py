@@ -405,7 +405,10 @@ def _d4m_cell(arch: str, shape: str, mesh: Mesh, variant: str = "baseline"
                       sds((n_inst, blocks, block), I32),
                       sds((n_inst, blocks, block), F32))
         # full knob set from the config — the dry-run lowers the production
-        # (fused, depth-bucketed) ingest, not just the layered oracle
+        # (fused, depth-bucketed) ingest, not just the layered oracle.
+        # sharded_ingest_fn is a stages.Wrapped, so this lowering lands in
+        # the keyed stage cache and is shared with any later real dispatch
+        # of the same configuration (repro/stages.py).
         fn = distributed.sharded_ingest_fn(
             mesh, axes, lazy_l0=cfg.lazy_l0, use_kernel=cfg.use_kernel,
             fused=cfg.fused, chunk=chunk, batch_mode=cfg.batch_mode)

@@ -21,6 +21,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import stages
 from repro.checkpoint import latest_step, restore, save
 from repro.core import distributed, stream
 from repro.data.powerlaw import instance_streams
@@ -41,9 +42,19 @@ def run(args) -> dict:
     chunk = getattr(args, "chunk", 1)
     use_kernel = getattr(args, "use_kernel", False)
     batch_mode = getattr(args, "batch_mode", "grouped")
-    ingest = jax.jit(lambda s, r, c, v: stream.ingest_instances(
-        s, r, c, v, fused=fused, lazy_l0=lazy_l0, chunk=chunk,
-        use_kernel=use_kernel, batch_mode=batch_mode))
+    sig = stages.signature_of(cuts=cuts, block_size=args.block_size,
+                              fused=fused, lazy_l0=lazy_l0, chunk=chunk,
+                              use_kernel=use_kernel, batch_mode=batch_mode)
+    if getattr(args, "stages_cache", ""):
+        stages.set_cache_dir(args.stages_cache)
+    blocks_per_round = max(args.blocks // args.rounds, 1)
+    if getattr(args, "precompile", False):
+        report = stages.precompile_fleet(
+            sig, instances=args.instances, blocks=blocks_per_round)
+        if args.verbose:
+            for entry, how in report.items():
+                print(f"[precompile] {entry}: {how}")
+    ingest = stream.ingest_instances_jit(sig)
 
     start_round = 0
     if args.ckpt_dir and args.resume:
@@ -57,7 +68,6 @@ def run(args) -> dict:
     # for this run's updates.
     spills_l0_baseline = int(jnp.sum(states.spills[:, 0]))
 
-    blocks_per_round = max(args.blocks // args.rounds, 1)
     total_updates = 0
     wall = 0.0
     spill_counts = None
@@ -135,6 +145,12 @@ def main():
                     "masked merge per instance; switch = legacy vmapped "
                     "lax.switch (executes every branch — the divergence "
                     "A/B baseline)")
+    ap.add_argument("--stages-cache", dest="stages_cache", default="",
+                    help="persistent compile-cache directory "
+                    "(repro.stages.set_cache_dir)")
+    ap.add_argument("--precompile", action="store_true",
+                    help="compile the whole dispatch set up front "
+                    "(stages.precompile_fleet) before streaming")
     args = ap.parse_args()
     out = run(args)
     print(f"sustained {out['updates_per_s']:,.0f} updates/s over "

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import stages
 from repro.compat import shard_map
 from repro.configs import D4M_SHAPES, LM_SHAPES, get_config
 from repro.distribution.sharding import (lm_param_specs, make_policy,
@@ -242,9 +243,17 @@ def d4m_corrected(arch: str, shape: str, mesh: Mesh,
                 return h
             return jax.vmap(one)(states, rows, cols, vals)
 
-        f = jax.jit(shard_map(
+        # through the keyed stage cache: re-probing the same (config, tp)
+        # reuses the lowering, and stages.Lowered/Compiled delegate
+        # cost_analysis()/as_text() to the underlying executable
+        sig = stages.signature_of(
+            cuts=cuts, block_size=block, fused=cfg.fused,
+            lazy_l0=cfg.lazy_l0, use_kernel=cfg.use_kernel,
+            batch_mode=cfg.batch_mode, mesh=mesh, data_axes=axes,
+            extra=(("probe_tp", tp), ("upd_block", upd_block)))
+        f = stages.wrap(shard_map(
             unrolled, mesh=mesh, in_specs=(spec,) * 4, out_specs=spec,
-            check_vma=False))
+            check_vma=False), "probes.d4m_ingest", sig)
         states_abs = jax.eval_shape(
             lambda: distributed.create_instances(n_inst, cuts, block))
         stream = (sds((n_inst, tp, upd_block), I32),

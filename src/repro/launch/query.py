@@ -23,6 +23,7 @@ import argparse
 import jax
 import jax.numpy as jnp
 
+from repro import stages
 from repro.configs import get_config
 from repro.core import distributed
 from repro.data.powerlaw import instance_streams
@@ -31,6 +32,23 @@ from repro.query import service
 
 def run(args) -> dict:
     cuts = tuple(int(c) for c in args.cuts.split(","))
+    if getattr(args, "stages_cache", ""):
+        stages.set_cache_dir(args.stages_cache)
+    if getattr(args, "precompile", False):
+        # run_service slices the stream into T//rounds blocks per round —
+        # precompile against exactly that shape so the service loop's first
+        # dispatch is already staged.
+        n_keys = 1 << args.scale
+        sig = stages.signature_of(
+            cuts=cuts, block_size=args.block_size,
+            fused=not args.layered, lazy_l0=not args.no_lazy_l0,
+            chunk=args.chunk, use_kernel=args.use_kernel,
+            batch_mode=args.batch_mode, l0_mode=args.l0_mode)
+        stages.precompile_fleet(
+            sig, instances=args.instances,
+            blocks=args.blocks // args.rounds, queries=args.queries,
+            analytics_num_rows=0 if args.no_analytics else n_keys,
+            analytics_k=args.top_k)
     key = jax.random.PRNGKey(args.seed)
     rows, cols, vals = instance_streams(
         key, args.instances, args.blocks, args.block_size, scale=args.scale)
@@ -99,6 +117,12 @@ def main():
     ap.add_argument("--batch-mode", dest="batch_mode",
                     choices=("grouped", "bucketed", "branchfree", "switch"),
                     default=cfg.batch_mode)
+    ap.add_argument("--stages-cache", dest="stages_cache", default="",
+                    help="persistent compile-cache directory "
+                    "(repro.stages.set_cache_dir)")
+    ap.add_argument("--precompile", action="store_true",
+                    help="compile the whole dispatch set up front "
+                    "(stages.precompile_fleet) before serving")
     args = ap.parse_args()
     out = run(args)
     print(f"ingest  {out['updates_per_s']:,.0f} upd/s "

@@ -31,6 +31,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import stages
 from repro.core import assoc
 from repro.core import semiring as sr_mod
 from repro.core.assoc import SENTINEL, AssocSegment
@@ -145,17 +146,30 @@ def point_lookup(h, rows, cols, sr: Semiring = sr_mod.PLUS_TIMES,
     value of each key combined across every layer (exactly what
     ``assoc.lookup(query_all(h), r, c)`` returns, without the merge).
     """
+    sig = stages.signature_for_state(h, sr=sr, use_kernel=use_kernel,
+                                     l0_mode=l0_mode)
     rows = jnp.atleast_1d(jnp.asarray(rows, jnp.int32))
     cols = jnp.atleast_1d(jnp.asarray(cols, jnp.int32))
     rows, cols = jnp.broadcast_arrays(rows, cols)   # scalar row + vector col
-    runs, raw = _l0_runs(h, rows.shape[0], sr, use_kernel, l0_mode)
-    zero = sr_mod.integer_zero(sr, h.layers[0].dtype)
-    out = jnp.full(rows.shape, zero)
-    for seg in runs:
-        out = sr.add(out, segment_point_lookup(seg, rows, cols, sr))
-    if raw is not None:
-        out = sr.add(out, _raw_point(raw, rows, cols, sr))
-    return out
+    return point_lookup_wrapped(sig)(h, rows, cols)
+
+
+def point_lookup_wrapped(sig: stages.Signature) -> stages.Wrapped:
+    """Keyed Q-vector point-query program for one config signature."""
+    sr = sr_mod.get(sig.sr)
+    use_kernel, l0_mode = sig.use_kernel, sig.l0_mode or "auto"
+
+    def run(h, rows, cols):
+        runs, raw = _l0_runs(h, rows.shape[0], sr, use_kernel, l0_mode)
+        zero = sr_mod.integer_zero(sr, h.layers[0].dtype)
+        out = jnp.full(rows.shape, zero)
+        for seg in runs:
+            out = sr.add(out, segment_point_lookup(seg, rows, cols, sr))
+        if raw is not None:
+            out = sr.add(out, _raw_point(raw, rows, cols, sr))
+        return out
+
+    return stages.wrap(run, "query.engine.point_lookup", sig)
 
 
 def lookup(h, row, col, sr: Semiring = sr_mod.PLUS_TIMES,
@@ -205,7 +219,30 @@ def extract_rows(h, rows, num_cols: int, *,
 
     Returns ``(dense [Q, num_cols], truncated int32[Q])``.
     """
+    sig = stages.signature_for_state(
+        h, sr=sr, use_kernel=use_kernel, l0_mode=l0_mode,
+        extra=(("num_cols", int(num_cols)),
+               ("width", None if width is None else int(width))))
     rows = jnp.atleast_1d(jnp.asarray(rows, jnp.int32))
+    return extract_rows_wrapped(sig)(h, rows)
+
+
+def extract_rows_wrapped(sig: stages.Signature) -> stages.Wrapped:
+    """Keyed dense-row-extraction program for one config signature
+    (``num_cols``/``width`` ride in ``sig.extra``)."""
+    sr = sr_mod.get(sig.sr)
+    use_kernel, l0_mode = sig.use_kernel, sig.l0_mode or "auto"
+    statics = dict(sig.extra)
+    num_cols, width = statics["num_cols"], statics["width"]
+
+    def run(h, rows):
+        return _extract_rows_body(h, rows, num_cols, sr, width, use_kernel,
+                                  l0_mode)
+
+    return stages.wrap(run, "query.engine.extract_rows", sig)
+
+
+def _extract_rows_body(h, rows, num_cols, sr, width, use_kernel, l0_mode):
     q = rows.shape[0]
     vdtype = h.layers[0].dtype
     zero = sr_mod.integer_zero(sr, vdtype)
@@ -256,9 +293,26 @@ def range_total(h, row_lo, row_hi, sr: Semiring = sr_mod.PLUS_TIMES,
     search); the idempotent semirings fall back to a masked [Q, C] reduce
     (max/min have no subtractive prefix trick).
     """
+    sig = stages.signature_for_state(h, sr=sr, use_kernel=use_kernel,
+                                     l0_mode=l0_mode)
     row_lo = jnp.atleast_1d(jnp.asarray(row_lo, jnp.int32))
     row_hi = jnp.atleast_1d(jnp.asarray(row_hi, jnp.int32))
     row_lo, row_hi = jnp.broadcast_arrays(row_lo, row_hi)
+    return range_total_wrapped(sig)(h, row_lo, row_hi)
+
+
+def range_total_wrapped(sig: stages.Signature) -> stages.Wrapped:
+    """Keyed row-range reduction program for one config signature."""
+    sr = sr_mod.get(sig.sr)
+    use_kernel, l0_mode = sig.use_kernel, sig.l0_mode or "auto"
+
+    def run(h, row_lo, row_hi):
+        return _range_total_body(h, row_lo, row_hi, sr, use_kernel, l0_mode)
+
+    return stages.wrap(run, "query.engine.range_total", sig)
+
+
+def _range_total_body(h, row_lo, row_hi, sr, use_kernel, l0_mode):
     q = row_lo.shape[0]
     zero = sr_mod.integer_zero(sr, h.layers[0].dtype)
     out = jnp.full(row_lo.shape, zero)

@@ -23,6 +23,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import stages
 from repro.core import semiring as sr_mod
 from repro.core import stream
 from repro.core.semiring import Semiring
@@ -35,38 +36,45 @@ def make_ingest_fn(sr: Semiring = sr_mod.PLUS_TIMES, *,
                    use_kernel: bool = False, lazy_l0: bool = False,
                    fused: bool = True, chunk: int = 1,
                    batch_mode: str = "grouped"):
-    """Jitted (states, [I,T,B] stream) -> states round step (telemetry
+    """Staged (states, [I,T,B] stream) -> states round step (telemetry
     dropped so XLA can DCE it on the hot path).  The state is donated —
     matching ``distributed.sharded_ingest_fn`` — so each round updates the
     hierarchy buffers in place instead of copying the whole fleet state;
-    callers must use the returned states, never the argument."""
-    def run(s, r, c, v):
-        return stream.ingest_instances(
-            s, r, c, v, sr=sr, use_kernel=use_kernel, lazy_l0=lazy_l0,
-            fused=fused, chunk=chunk, batch_mode=batch_mode)[0]
-    return jax.jit(run, donate_argnums=(0,))
+    callers must use the returned states, never the argument.  Routes
+    through ``stream.ingest_instances_jit`` so the service shares the
+    keyed compile cache with every other ingest entry point."""
+    sig = stages.signature_of(sr=sr, use_kernel=use_kernel, lazy_l0=lazy_l0,
+                              fused=fused, chunk=chunk,
+                              batch_mode=batch_mode)
+    return stream.ingest_instances_jit(sig, with_telemetry=False,
+                                       donate=True)
 
 
 def make_point_query_fn(sr: Semiring = sr_mod.PLUS_TIMES, *,
                         use_kernel: bool = False, l0_mode: str = "auto"):
-    """Jitted (states, q_rows [Q], q_cols [Q]) -> values [I, Q]: one
+    """Staged (states, q_rows [Q], q_cols [Q]) -> values [I, Q]: one
     engine dispatch answers the whole query vector for every local
     instance (the vmapped analogue of ``stream.update_instances``)."""
+    sig = stages.signature_of(sr=sr, use_kernel=use_kernel, l0_mode=l0_mode)
+
     def run(s, q_rows, q_cols):
         return jax.vmap(
             lambda h: engine.point_lookup(h, q_rows, q_cols, sr=sr,
                                           use_kernel=use_kernel,
                                           l0_mode=l0_mode))(s)
-    return jax.jit(run)
+    return stages.wrap(run, "service.point_query", sig)
 
 
 def make_analytics_fn(num_rows: int, k: int,
                       sr: Semiring = sr_mod.PLUS_TIMES):
-    """Jitted states -> (top-k totals [I, k], top-k row ids [I, k])."""
+    """Staged states -> (top-k totals [I, k], top-k row ids [I, k])."""
+    sig = stages.signature_of(sr=sr, extra=(("num_rows", int(num_rows)),
+                                            ("k", int(k))))
+
     def run(s):
         return jax.vmap(
             lambda h: analytics.top_k_rows(h, num_rows, k, sr=sr))(s)
-    return jax.jit(run)
+    return stages.wrap(run, "service.analytics", sig)
 
 
 def run_service(states, rows: Array, cols: Array, vals: Array,
