@@ -1,0 +1,23 @@
+"""Static + runtime contract enforcement for the repo's invariants.
+
+Every correctness incident in this repo's history was a violation of an
+unwritten, mechanically checkable contract: the vmapped ``lax.switch``
+executing all branches (PR 3), the dirty-sentinel-tail reductions (PR 5),
+the bare-jit retrace sprawl (PR 6).  This package writes those contracts
+down and enforces them twice:
+
+- ``repro.analysis.lint`` (**reprolint**): an AST lint, stdlib-``ast``
+  only, run as ``python -m repro.analysis.lint src/``.  Rules R001-R005
+  encode the jit-front-door and canonical-form contracts at the source
+  level.  Import is jax-free so CI can lint without touching the
+  accelerator stack.
+- ``repro.analysis.contracts``: a ``jax.experimental.checkify`` runtime
+  sanitizer (``check_canonical`` / ``check_counter`` / ``check_plan``)
+  threaded into the ingest/query paths behind ``REPRO_CHECK=1``.  Off by
+  default and staged out to literally zero cost: the instrumented
+  programs key separate ``stages`` cache entries, so production keys
+  never see a check.
+
+Do NOT import ``contracts`` here: ``lint`` must stay importable without
+jax installed/initialized.
+"""

@@ -1,0 +1,273 @@
+"""Runtime contract sanitizer — ``jax.experimental.checkify`` checks for
+the invariants the whole hierarchy trades on.
+
+The canonical-form contract (see the CONTRACTS section of
+``repro/core/assoc.py``) is what lets 30,000+ share-nothing instances
+merge, query and checkpoint without coordination; every past correctness
+incident was a path that silently violated it.  This module turns the
+contract into executable checks:
+
+    check_canonical(seg, sr)      entries [0, nnz) sorted-unique by
+                                  (hi, lo); slots [nnz, C) exactly
+                                  SENTINEL + the semiring zero; nnz <= C.
+                                  ``sorted=False`` checks the weaker
+                                  RAW-buffer contract (bounds + clean
+                                  sentinel tail, no ordering claim).
+    check_counter(h)              (hi, lo) uint32-carry counter words:
+                                  non-negative carry word, and total live
+                                  slots never exceed total raw updates.
+    check_plan(depths, cuts)      planned spill depths inside [0, L).
+    check_hier(h, sr)             whole-state check: every layer + the
+                                  counter words.
+
+Activation: the ``REPRO_CHECK=1`` environment variable (or an explicit
+``debug=True`` knob) makes the eager front doors — ``hier.update`` /
+``hier.flush``, ``stream.update_instances``, the ``query.engine``
+dispatches, ``ckpt.restore`` — run an instrumented variant of their
+staged program.  The instrumented program carries ``("debug", True)`` in
+its ``stages.Signature.extra``, so it keys a SEPARATE cache entry and
+the production keys never see a check; with the knob off the builders
+trace byte-identical jaxprs to the uninstrumented ones (asserted in
+tests/test_contracts.py via ``stages.stats()`` and jaxpr comparison).
+
+All check functions are broadcasting (arbitrary leading instance axes)
+and vmap-safe: they compare along the last axis only.  They emit
+``checkify.check`` calls, so they are only legal inside a function that
+is ultimately wrapped by ``checkify.checkify`` — use ``checkified`` /
+``activate()`` (the deep-check flag ``assoc.merge_many`` consults) and
+``throw`` for the standard pattern.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+import threading
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import checkify
+
+from repro.core import semiring as sr_mod
+from repro.core.semiring import Semiring
+
+# Mirrors assoc.SENTINEL; kept local so assoc can import this module
+# without a cycle.
+SENTINEL = jnp.iinfo(jnp.int32).max
+
+ENV_VAR = "REPRO_CHECK"
+
+# Appended to Signature.extra by debug-instrumented entry points: the
+# instrumented program keys a separate stages cache entry.
+DEBUG_EXTRA: Tuple[Tuple[str, bool], ...] = (("debug", True),)
+
+_ACTIVE = threading.local()
+
+
+def enabled(debug: Optional[bool] = None) -> bool:
+    """The sanitizer knob: an explicit ``debug`` argument wins, otherwise
+    ``REPRO_CHECK`` (unset/empty/"0" mean off)."""
+    if debug is not None:
+        return bool(debug)
+    return os.environ.get(ENV_VAR, "") not in ("", "0")
+
+
+def sig_debug(sig) -> bool:
+    """True when a ``stages.Signature`` carries the debug knob."""
+    return ("debug", True) in tuple(sig.extra)
+
+
+def debug_signature(sig):
+    """The signature's instrumented twin (idempotent)."""
+    import dataclasses
+    if sig_debug(sig):
+        return sig
+    return dataclasses.replace(sig, extra=tuple(sig.extra) + DEBUG_EXTRA)
+
+
+def deep_checks_active() -> bool:
+    """True while tracing inside an ``activate()`` region — the flag deep
+    library code (``assoc.merge_many``) consults so intermediate results
+    are checked without threading a debug argument through the cascade."""
+    return getattr(_ACTIVE, "on", False)
+
+
+@contextlib.contextmanager
+def activate():
+    prev = getattr(_ACTIVE, "on", False)
+    _ACTIVE.on = True
+    try:
+        yield
+    finally:
+        _ACTIVE.on = prev
+
+
+def checkified(fn):
+    """``checkify.checkify(fn)`` with user checks — the transformed
+    function returns ``(err, out)``; pass ``err`` to ``throw``."""
+    return checkify.checkify(fn)
+
+
+def throw(err) -> None:
+    """Raise the checkify error (host-side; ``err`` must be concrete)."""
+    err.throw()
+
+
+# ------------------------------------------------------------------ checks --
+
+
+def _slot_index(x: jax.Array) -> jax.Array:
+    return jnp.arange(x.shape[-1], dtype=jnp.int32)
+
+
+def check_canonical(seg, sr: Semiring = sr_mod.PLUS_TIMES,
+                    name: str = "segment", sorted: bool = True) -> None:
+    """Checkify-assert one segment upholds its buffer contract.
+
+    ``sorted=True`` asserts full canonical form; ``sorted=False`` asserts
+    the weaker raw-buffer contract a lazy layer-0 append buffer upholds
+    (nnz bound + sentinel-clean tail — entries [0, nnz) may be unsorted
+    and duplicated).  A canonical segment passes the raw check, so
+    ``sorted=False`` is always safe when the discipline is unknown.
+    """
+    C = seg.hi.shape[-1]
+    slot = _slot_index(seg.hi)
+    nnz = seg.nnz[..., None] if jnp.ndim(seg.nnz) else seg.nnz
+    live = slot < nnz
+    zero = sr_mod.integer_zero(sr, seg.val.dtype)
+
+    checkify.check(
+        jnp.all((seg.nnz >= 0) & (seg.nnz <= C)),
+        f"nnz bound violation in {name}: nnz outside [0, capacity]")
+    tail_ok = jnp.where(live, True,
+                        (seg.hi == SENTINEL) & (seg.lo == SENTINEL)
+                        & (seg.val == zero))
+    checkify.check(
+        jnp.all(tail_ok),
+        f"sentinel-tail violation in {name}: slots [nnz, C) must hold the "
+        "SENTINEL key and the semiring zero")
+    if sorted:
+        real = jnp.where(live, (seg.hi != SENTINEL) & (seg.lo != SENTINEL),
+                         True)
+        checkify.check(
+            jnp.all(real),
+            f"canonical-form violation in {name}: SENTINEL key inside the "
+            "live prefix [0, nnz)")
+        up = (seg.hi[..., 1:] > seg.hi[..., :-1]) \
+            | ((seg.hi[..., 1:] == seg.hi[..., :-1])
+               & (seg.lo[..., 1:] > seg.lo[..., :-1]))
+        both_live = slot[1:] < nnz
+        checkify.check(
+            jnp.all(jnp.where(both_live, up, True)),
+            f"canonical-form violation in {name}: entries [0, nnz) not "
+            "sorted-unique by (hi, lo)")
+
+
+def check_counter(h, name: str = "hier") -> None:
+    """(hi, lo) uint32-carry counter consistency.
+
+    The carry word counts 2**32 wraps, so it can never go negative; and
+    every live slot in the hierarchy was deposited by at least one raw
+    update, so the total slot count can never exceed the 64-bit update
+    total (compared without int64: a positive carry word alone dominates
+    any int32 slot count).
+    """
+    if h.n_updates.dtype != jnp.uint32 or h.n_updates_hi.dtype != jnp.int32:
+        raise TypeError(
+            f"counter word dtype violation in {name}: expected "
+            f"(uint32 lo, int32 hi), got ({h.n_updates.dtype}, "
+            f"{h.n_updates_hi.dtype})")
+    checkify.check(
+        jnp.all(h.n_updates_hi >= 0),
+        f"counter carry violation in {name}: high word negative")
+    slots = sum(l.nnz.astype(jnp.uint32) for l in h.layers)
+    ok = (h.n_updates_hi > 0) | (slots <= h.n_updates)
+    checkify.check(
+        jnp.all(ok),
+        f"counter consistency violation in {name}: live slots exceed the "
+        "(hi, lo) raw-update total")
+
+
+def check_plan(depths, cuts, name: str = "plan") -> None:
+    """Spill-plan bounds: every planned destination inside [0, L)."""
+    L = len(tuple(cuts))
+    checkify.check(
+        jnp.all((depths >= 0) & (depths < L)),
+        f"spill-plan bound violation in {name}: planned depth outside "
+        f"[0, {L})")
+
+
+def check_hier(h, sr: Semiring = sr_mod.PLUS_TIMES,
+               l0_sorted: bool = True, name: str = "hier") -> None:
+    """Whole-state check: every layer's buffer contract plus the counter
+    words.  ``l0_sorted=False`` checks layer 0 against the raw-buffer
+    contract (lazy append discipline, or unknown provenance — e.g. a
+    restored checkpoint); deeper layers are always canonical."""
+    for i, layer in enumerate(h.layers):
+        check_canonical(layer, sr, name=f"{name} layer {i}",
+                        sorted=(i > 0) or l0_sorted)
+    check_counter(h, name=name)
+
+
+# ----------------------------------------------------- eager validation -----
+
+
+def validate_segment(seg, sr: Semiring = sr_mod.PLUS_TIMES,
+                     name: str = "segment", sorted: bool = True) -> None:
+    """Eagerly run ``check_canonical`` and throw on violation."""
+    err, _ = checkified(
+        lambda s: check_canonical(s, sr, name=name, sorted=sorted))(seg)
+    throw(err)
+
+
+def validate_hier(h, sr: Semiring = sr_mod.PLUS_TIMES,
+                  l0_sorted: bool = False, name: str = "hier") -> None:
+    """Eagerly run ``check_hier`` and throw on violation.  Defaults to the
+    raw-buffer contract for layer 0 because the caller usually cannot
+    know the append discipline (checkpoint restore)."""
+    err, _ = checkified(
+        lambda s: check_hier(s, sr, l0_sorted=l0_sorted, name=name))(h)
+    throw(err)
+
+
+def validate_restored(tree, sr: Semiring = sr_mod.PLUS_TIMES,
+                      name: str = "restore") -> None:
+    """Walk a restored pytree and validate every associative-array state
+    in it: ``HierAssoc``-shaped nodes get the whole-state check (layer 0
+    against the raw contract — restore cannot know the append
+    discipline), free-standing segments get the raw-buffer check.
+
+    Uses duck typing (``layers``/``n_updates`` attrs, ``hi``/``lo``/
+    ``val``/``nnz`` attrs) so the checkpoint layer does not need to
+    import core types for its template trees.
+    """
+    seen = set()
+
+    def is_hier(x):
+        return hasattr(x, "layers") and hasattr(x, "n_updates") \
+            and hasattr(x, "cuts")
+
+    def is_seg(x):
+        return all(hasattr(x, a) for a in ("hi", "lo", "val", "nnz"))
+
+    def visit(node, label):
+        if id(node) in seen:
+            return
+        seen.add(id(node))
+        if is_hier(node):
+            validate_hier(node, sr, l0_sorted=False, name=label)
+            return
+        if is_seg(node):
+            validate_segment(node, sr, name=label, sorted=False)
+            return
+        if isinstance(node, dict):
+            for k, v in node.items():
+                visit(v, f"{label}.{k}")
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                visit(v, f"{label}[{i}]")
+        elif hasattr(node, "__dataclass_fields__"):
+            for k in node.__dataclass_fields__:
+                visit(getattr(node, k), f"{label}.{k}")
+
+    visit(tree, name)

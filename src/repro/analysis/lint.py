@@ -1,0 +1,646 @@
+"""reprolint — AST lint for this repo's jit and canonical-form contracts.
+
+Stdlib ``ast`` only (no jax import — CI lints without the accelerator
+stack).  Run as::
+
+    python -m repro.analysis.lint src/
+
+Rules (each one encodes a past postmortem class):
+
+R001  Bare ``jax.jit`` outside ``repro/stages.py``.  PR 6 made
+      ``stages.wrap`` the one jit front door — a bare jit re-traces per
+      call site and bypasses the keyed AOT cache.  Any appearance of the
+      ``jax.jit`` attribute (call, decorator, ``partial(jax.jit, ...)``)
+      or a ``from jax import jit`` alias counts.
+R002  Data-dependent ``lax.switch``/``lax.cond`` reachable under ``vmap``
+      without a ``batch_mode`` gate (the PR 3 class: a vmapped switch
+      lowers to select-over-all-branches, so every instance pays every
+      branch).  Fires when the module uses ``vmap`` and no enclosing
+      function mentions ``batch_mode`` — the repo's convention for "this
+      control flow picked its execution strategy deliberately".
+R003  Donated-pytree use-after-donation: a callable built with
+      ``donate_argnums`` is called, and a variable passed at a donated
+      position is read afterwards without being rebound.  The donated
+      buffer is invalid after the call.
+R004  Host-side escape inside traced code: ``.item()``, ``int``/
+      ``float``/``bool`` on a non-static value, or ``np.*`` calls on
+      traced values inside a function that is jitted or passed to a
+      tracing transform.  Static shape/dtype metadata is exempt.
+R005  Raw-buffer reduction missing the ``sorted=False``/nnz gate (the
+      PR 5 dirty-tail class): a function reduces values derived from a
+      segment's ``.val`` buffer but never consults ``.nnz``, takes no
+      ``sorted`` parameter and passes no ``sorted=`` kwarg — i.e. it
+      trusts the sentinel tail, which is NOT part of the raw-buffer
+      contract (see the CONTRACTS section of repro/core/assoc.py).
+
+Suppression: append ``# reprolint: allow(R00x) <reason>`` to the line
+(or the line directly above, for wrapped statements).  A suppression
+without a reason does not suppress.  Pre-existing debt lives in a
+committed baseline file (one ``RULE path scope`` entry per violation) so
+it stays visible: the lint exits non-zero only on violations that are
+neither suppressed nor baselined.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import collections
+import dataclasses
+import os
+import re
+import sys
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+RULES = {
+    "R001": "bare jax.jit outside stages.py (route through stages.wrap)",
+    "R002": "vmap-reachable lax.switch/cond without a batch_mode gate",
+    "R003": "donated argument referenced after the donating call",
+    "R004": "host-side escape inside traced code",
+    "R005": "raw-buffer reduction without an nnz/sorted gate",
+}
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "reprolint_baseline.txt")
+
+_ALLOW_RE = re.compile(r"#\s*reprolint:\s*allow\(([A-Za-z0-9, ]+)\)\s*(.*)$")
+
+# Attribute names whose presence marks an expression as static metadata
+# (safe to consume host-side even in traced code).
+_STATIC_ATTRS = {"shape", "dtype", "ndim", "size", "itemsize", "capacity",
+                 "cuts", "num_layers", "name"}
+
+# Call sinks whose function-valued arguments are traced.
+_TRACE_SINKS = {"jit", "wrap", "dispatch", "vmap", "pmap", "scan",
+                "fori_loop", "while_loop", "cond", "switch", "shard_map",
+                "checkify", "grad", "value_and_grad", "remat", "checkpoint",
+                "custom_vjp", "custom_jvp", "make_jaxpr", "eval_shape",
+                "lower"}
+
+_REDUCE_ATTRS = {"sum", "cumsum", "prod", "mean", "max", "min",
+                 "amax", "amin", "segment_add", "segment_sum"}
+_SCATTER_REDUCE_ATTRS = {"add", "max", "min", "mul"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    rule: str
+    path: str
+    line: int
+    scope: str
+    message: str
+
+    @property
+    def key(self) -> str:
+        # Baseline identity is line-free so unrelated edits don't churn it.
+        return f"{self.rule} {self.path} {self.scope}"
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}: {self.rule} {self.message}"
+                f" [in {self.scope}]")
+
+
+def _norm_path(path: str) -> str:
+    """Stable repo-relative identity: everything from the last ``repro``
+    package component on, else the basename."""
+    parts = os.path.abspath(path).replace(os.sep, "/").split("/")
+    if "repro" in parts:
+        i = len(parts) - 1 - parts[::-1].index("repro")
+        return "/".join(parts[i:])
+    return parts[-1]
+
+
+# --------------------------------------------------------------- file model --
+
+
+def _names_in(node: ast.AST) -> Set[str]:
+    out = set()
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name):
+            out.add(n.id)
+        elif isinstance(n, ast.arg):
+            out.add(n.arg)
+    return out
+
+
+def _attrs_in(node: ast.AST) -> Set[str]:
+    return {n.attr for n in ast.walk(node) if isinstance(n, ast.Attribute)}
+
+
+def _func_tail(func: ast.AST) -> Optional[str]:
+    """Rightmost identifier of a call target: ``jax.lax.cond`` -> ``cond``."""
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return None
+
+
+def _is_dotted(node: ast.AST, *path: str) -> bool:
+    """True when ``node`` is exactly the dotted name ``path`` (e.g.
+    ``jax.jit``) or its tail (``lax.cond`` for ``jax.lax.cond``)."""
+    want = list(path)
+    cur = node
+    while len(want) > 1:
+        if not (isinstance(cur, ast.Attribute) and cur.attr == want[-1]):
+            return False
+        want.pop()
+        cur = cur.value
+    return isinstance(cur, ast.Name) and cur.id == want[0]
+
+
+class _File:
+    """Parsed file plus the scope/parent indexes every rule shares."""
+
+    def __init__(self, source: str, path: str):
+        self.path = path
+        self.norm = _norm_path(path)
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        self.parents: Dict[ast.AST, ast.AST] = {}
+        for node in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(node):
+                self.parents[child] = node
+        self.allow: Dict[int, Tuple[Set[str], str]] = {}
+        for i, line in enumerate(self.lines, start=1):
+            m = _ALLOW_RE.search(line)
+            if m:
+                rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+                self.allow[i] = (rules, m.group(2).strip())
+        self._scope_names: Dict[ast.AST, Set[str]] = {}
+
+    def scopes_of(self, node: ast.AST) -> List[ast.AST]:
+        """Enclosing function scopes, innermost first."""
+        out = []
+        cur = self.parents.get(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.Lambda)):
+                out.append(cur)
+            cur = self.parents.get(cur)
+        return out
+
+    def scope_name(self, node: ast.AST) -> str:
+        parts = []
+        for s in self.scopes_of(node):
+            parts.append(getattr(s, "name", "<lambda>"))
+        return ".".join(reversed(parts)) or "<module>"
+
+    def scope_mentions(self, scope: ast.AST, name: str) -> bool:
+        if scope not in self._scope_names:
+            self._scope_names[scope] = _names_in(scope)
+        return name in self._scope_names[scope]
+
+    def suppressed(self, v: Violation) -> bool:
+        for line in (v.line, v.line - 1):
+            entry = self.allow.get(line)
+            if entry and v.rule in entry[0] and entry[1]:
+                return True
+        return False
+
+
+# -------------------------------------------------------------------- rules --
+
+
+def _r001(f: _File) -> Iterable[Violation]:
+    if os.path.basename(f.path) == "stages.py":
+        return
+    jit_aliases = set()
+    for node in ast.walk(f.tree):
+        if isinstance(node, ast.ImportFrom) and node.module == "jax":
+            for alias in node.names:
+                if alias.name == "jit":
+                    jit_aliases.add(alias.asname or alias.name)
+    for node in ast.walk(f.tree):
+        hit = False
+        if isinstance(node, ast.Attribute) and node.attr == "jit" \
+                and isinstance(node.value, ast.Name) \
+                and node.value.id == "jax":
+            hit = True
+        elif isinstance(node, ast.Name) and node.id in jit_aliases \
+                and isinstance(node.ctx, ast.Load):
+            hit = True
+        if hit:
+            yield Violation(
+                "R001", f.norm, node.lineno, f.scope_name(node),
+                "bare jax.jit: production dispatch routes through "
+                "repro.stages.wrap (keyed AOT cache, PR 6 contract)")
+
+
+def _r002(f: _File) -> Iterable[Violation]:
+    uses_vmap = any(
+        (isinstance(n, ast.Name) and n.id == "vmap")
+        or (isinstance(n, ast.Attribute) and n.attr == "vmap")
+        for n in ast.walk(f.tree))
+    if not uses_vmap:
+        return
+    for node in ast.walk(f.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        func = node.func
+        if not (isinstance(func, ast.Attribute)
+                and func.attr in ("switch", "cond")
+                and (_is_dotted(func.value, "lax")
+                     or _is_dotted(func.value, "jax", "lax"))):
+            continue
+        gated = any(f.scope_mentions(s, "batch_mode")
+                    for s in f.scopes_of(node))
+        if not gated:
+            yield Violation(
+                "R002", f.norm, node.lineno, f.scope_name(node),
+                f"lax.{func.attr} in a vmap-using module without a "
+                "batch_mode gate: a vmapped switch/cond lowers to "
+                "select-over-all-branches (PR 3 class)")
+
+
+def _donation_positions(call: ast.Call) -> Optional[Tuple[int, ...]]:
+    """donate_argnums positions when ``call`` builds a donating callable
+    (jax.jit / stages.wrap / partial-wrapped forms), else None."""
+    tail = _func_tail(call.func)
+    if tail == "partial" and call.args \
+            and isinstance(call.args[0], ast.Call):
+        return _donation_positions(call.args[0])
+    if tail not in ("jit", "wrap"):
+        return None
+    for kw in call.keywords:
+        if kw.arg == "donate_argnums":
+            positions = []
+            vals = kw.value.elts if isinstance(
+                kw.value, (ast.Tuple, ast.List)) else [kw.value]
+            for v in vals:
+                if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                    positions.append(v.value)
+            return tuple(positions)
+    return None
+
+
+def _stmt_lists(root: ast.AST) -> Iterable[List[ast.stmt]]:
+    for node in ast.walk(root):
+        for field in ("body", "orelse", "finalbody"):
+            stmts = getattr(node, field, None)
+            if isinstance(stmts, list) and stmts \
+                    and all(isinstance(s, ast.stmt) for s in stmts):
+                yield stmts
+
+
+def _assigned_names(stmt: ast.stmt) -> Set[str]:
+    out = set()
+    for n in ast.walk(stmt):
+        if isinstance(n, ast.Name) and isinstance(n.ctx, (ast.Store,
+                                                          ast.Del)):
+            out.add(n.id)
+    return out
+
+
+def _read_names(stmt: ast.stmt) -> Set[str]:
+    return {n.id for n in ast.walk(stmt)
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)}
+
+
+def _r003(f: _File) -> Iterable[Violation]:
+    donors: Dict[str, Tuple[int, ...]] = {}
+    for node in ast.walk(f.tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and isinstance(node.value, ast.Call):
+            pos = _donation_positions(node.value)
+            if pos:
+                donors[node.targets[0].id] = pos
+    if not donors:
+        return
+    for stmts in _stmt_lists(f.tree):
+        for i, stmt in enumerate(stmts):
+            for call in ast.walk(stmt):
+                if not (isinstance(call, ast.Call)
+                        and isinstance(call.func, ast.Name)
+                        and call.func.id in donors):
+                    continue
+                rebound = _assigned_names(stmt)
+                for pos in donors[call.func.id]:
+                    if pos >= len(call.args):
+                        continue
+                    arg = call.args[pos]
+                    if not isinstance(arg, ast.Name):
+                        continue
+                    if arg.id in rebound:
+                        continue            # x = f(x): rebound by the call
+                    for later in stmts[i + 1:]:
+                        if arg.id in _read_names(later):
+                            yield Violation(
+                                "R003", f.norm, later.lineno,
+                                f.scope_name(later),
+                                f"'{arg.id}' read after being donated to "
+                                f"'{call.func.id}' (donate_argnums "
+                                f"position {pos}) — the buffer is invalid "
+                                "after the call")
+                            break
+                        if arg.id in _assigned_names(later):
+                            break
+
+
+def _traced_functions(f: _File) -> Set[ast.AST]:
+    """Function nodes whose bodies execute under a JAX trace (directly
+    jitted, passed to a tracing transform, or lexically inside one)."""
+    traced: Set[ast.AST] = set()
+    by_name: Dict[str, List[ast.AST]] = collections.defaultdict(list)
+    for node in ast.walk(f.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            by_name[node.name].append(node)
+            for dec in node.decorator_list:
+                if "jit" in _names_in(dec) | _attrs_in(dec):
+                    traced.add(node)
+    for node in ast.walk(f.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if _func_tail(node.func) not in _TRACE_SINKS:
+            continue
+        for arg in list(node.args) + [kw.value for kw in node.keywords]:
+            if isinstance(arg, ast.Lambda):
+                traced.add(arg)
+            elif isinstance(arg, ast.Name):
+                traced.update(by_name.get(arg.id, ()))
+    return traced
+
+
+def _is_static_expr(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant):
+        return True
+    for n in ast.walk(node):
+        if isinstance(n, ast.Attribute) and n.attr in _STATIC_ATTRS:
+            return True
+        if isinstance(n, ast.Call) and _func_tail(n.func) == "len":
+            return True
+    return False
+
+
+def _static_argnames(fn: ast.AST) -> Set[str]:
+    """Names declared static in a jit decorator on ``fn``."""
+    out: Set[str] = set()
+    for dec in getattr(fn, "decorator_list", ()):
+        for n in ast.walk(dec):
+            if isinstance(n, ast.keyword) and n.arg == "static_argnames":
+                vals = n.value.elts if isinstance(
+                    n.value, (ast.Tuple, ast.List)) else [n.value]
+                out |= {v.value for v in vals
+                        if isinstance(v, ast.Constant)
+                        and isinstance(v.value, str)}
+    return out
+
+
+def _r004(f: _File) -> Iterable[Violation]:
+    traced = _traced_functions(f)
+    if not traced:
+        return
+
+    def in_traced(node: ast.AST) -> bool:
+        return any(s in traced for s in f.scopes_of(node))
+
+    def static_name(node: ast.AST, name: str) -> bool:
+        """A Name consumed host-side is fine when it is a declared
+        static_argname, or a closure constant bound entirely outside the
+        traced region (the stages.wrap idiom: traced ``run`` bodies close
+        over static knobs held by the maker function)."""
+        scopes = f.scopes_of(node)
+        for s in scopes:
+            params = {a.arg for a in s.args.args + s.args.kwonlyargs} \
+                if not isinstance(s, ast.Lambda) \
+                else {a.arg for a in s.args.args}
+            if name in params and name in _static_argnames(s):
+                return True
+            stores = {n.id for n in ast.walk(s)
+                      if isinstance(n, ast.Name)
+                      and isinstance(n.ctx, ast.Store)}
+            if name in params or name in stores:
+                # bound inside this scope: static only if the scope is
+                # OUTSIDE the traced region (a maker closing over knobs)
+                return s not in traced \
+                    and not any(t in traced for t in f.scopes_of(s))
+        return True                     # module-level constant
+
+    for node in ast.walk(f.tree):
+        if not (isinstance(node, ast.Call) and in_traced(node)):
+            continue
+        func = node.func
+        if isinstance(func, ast.Attribute) and func.attr == "item":
+            yield Violation(
+                "R004", f.norm, node.lineno, f.scope_name(node),
+                ".item() inside traced code forces a host sync "
+                "(ConcretizationTypeError under jit)")
+        elif isinstance(func, ast.Name) and func.id in ("int", "float",
+                                                        "bool") \
+                and node.args and not _is_static_expr(node.args[0]) \
+                and not (isinstance(node.args[0], ast.Name)
+                         and static_name(node, node.args[0].id)):
+            yield Violation(
+                "R004", f.norm, node.lineno, f.scope_name(node),
+                f"{func.id}() on a possibly-traced value inside traced "
+                "code (static shape/dtype metadata is exempt)")
+        elif isinstance(func, ast.Attribute) \
+                and isinstance(func.value, ast.Name) \
+                and func.value.id in ("np", "numpy") \
+                and node.args \
+                and not all(_is_static_expr(a) for a in node.args):
+            yield Violation(
+                "R004", f.norm, node.lineno, f.scope_name(node),
+                f"numpy call np.{func.attr}(...) on a possibly-traced "
+                "value inside traced code escapes the trace")
+
+
+def _reduction_call(node: ast.Call) -> bool:
+    func = node.func
+    if isinstance(func, ast.Attribute) and func.attr in _REDUCE_ATTRS:
+        base = func.value
+        if isinstance(base, ast.Name) and base.id in ("jnp", "np", "numpy",
+                                                      "lax", "jax", "sr"):
+            return True
+        if isinstance(base, ast.Attribute):       # jax.ops.segment_sum
+            return True
+    # x.at[...].add(v) scatter-reductions
+    if isinstance(func, ast.Attribute) \
+            and func.attr in _SCATTER_REDUCE_ATTRS \
+            and isinstance(func.value, ast.Subscript) \
+            and isinstance(func.value.value, ast.Attribute) \
+            and func.value.value.attr == "at":
+        return True
+    return False
+
+
+def _r005(f: _File) -> Iterable[Violation]:
+    for fn in ast.walk(f.tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        params = {a.arg for a in fn.args.args + fn.args.kwonlyargs}
+        if "sorted" in params:
+            continue                    # the gate is this function's job
+        if "nnz" in _attrs_in(fn):
+            continue                    # consults the live-slot count
+        passes_sorted = any(
+            kw.arg == "sorted"
+            for n in ast.walk(fn) if isinstance(n, ast.Call)
+            for kw in n.keywords)
+        if passes_sorted:
+            continue
+        # Taint: names derived (transitively) from a segment's .val buffer.
+        tainted: Set[str] = set()
+
+        def val_tainted(expr: ast.AST) -> bool:
+            for n in ast.walk(expr):
+                if isinstance(n, ast.Attribute) and n.attr == "val":
+                    return True
+                if isinstance(n, ast.Name) and n.id in tainted:
+                    return True
+            return False
+
+        assigns = [n for n in ast.walk(fn) if isinstance(n, ast.Assign)]
+        for _ in range(len(assigns) + 1):
+            grew = False
+            for a in assigns:
+                for t in a.targets:
+                    if isinstance(t, ast.Name) and t.id not in tainted \
+                            and val_tainted(a.value):
+                        tainted.add(t.id)
+                        grew = True
+            if not grew:
+                break
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call) and _reduction_call(node) \
+                    and node.args and val_tainted(node.args[0]):
+                yield Violation(
+                    "R005", f.norm, node.lineno, f.scope_name(node),
+                    "reduction over segment .val data with no .nnz gate, "
+                    "no sorted parameter and no sorted= kwarg — trusts "
+                    "the sentinel tail, which the raw-buffer contract "
+                    "does not promise (PR 5 class)")
+
+
+_RULE_FNS = (_r001, _r002, _r003, _r004, _r005)
+
+
+# ------------------------------------------------------------------ driver --
+
+
+def lint_source(source: str, path: str = "<string>",
+                with_suppressed: bool = False) -> List[Violation]:
+    """Lint one source blob.  Suppressed violations are dropped unless
+    ``with_suppressed`` — the self-tests use both views."""
+    f = _File(source, path)
+    out: List[Violation] = []
+    for rule in _RULE_FNS:
+        for v in rule(f):
+            if with_suppressed or not f.suppressed(v):
+                out.append(v)
+    return sorted(out, key=lambda v: (v.path, v.line, v.rule))
+
+
+def iter_py_files(paths: Sequence[str]) -> Iterable[str]:
+    for p in paths:
+        if os.path.isfile(p):
+            yield p
+        else:
+            for root, dirs, files in os.walk(p):
+                dirs[:] = sorted(d for d in dirs
+                                 if d not in ("__pycache__", ".git"))
+                for name in sorted(files):
+                    if name.endswith(".py"):
+                        yield os.path.join(root, name)
+
+
+def lint_paths(paths: Sequence[str]) -> List[Violation]:
+    out: List[Violation] = []
+    for path in iter_py_files(paths):
+        with open(path, "r", encoding="utf-8") as fh:
+            source = fh.read()
+        try:
+            out.extend(lint_source(source, path))
+        except SyntaxError as e:
+            out.append(Violation("R000", _norm_path(path), e.lineno or 0,
+                                 "<module>", f"syntax error: {e.msg}"))
+    return out
+
+
+def load_baseline(path: str) -> collections.Counter:
+    base: collections.Counter = collections.Counter()
+    if not os.path.exists(path):
+        return base
+    with open(path, "r", encoding="utf-8") as fh:
+        for line in fh:
+            line = line.strip()
+            if line and not line.startswith("#"):
+                base[line] += 1
+    return base
+
+
+def write_baseline(path: str, violations: Sequence[Violation]) -> None:
+    with open(path, "w", encoding="utf-8") as fh:
+        fh.write("# reprolint baseline — accepted pre-existing debt, one\n"
+                 "# 'RULE path scope' entry per violation.  Regenerate with\n"
+                 "#   python -m repro.analysis.lint src/ --write-baseline\n"
+                 "# New violations (keys not in this file) fail the lint.\n")
+        for v in sorted(violations, key=lambda v: v.key):
+            fh.write(v.key + "\n")
+
+
+def new_violations(violations: Sequence[Violation],
+                   baseline: collections.Counter) -> List[Violation]:
+    remaining = collections.Counter(baseline)
+    out = []
+    for v in violations:
+        if remaining[v.key] > 0:
+            remaining[v.key] -= 1
+        else:
+            out.append(v)
+    return out
+
+
+def per_rule_counts(violations: Sequence[Violation]) -> Dict[str, int]:
+    counts = {rule: 0 for rule in RULES}
+    for v in violations:
+        counts.setdefault(v.rule, 0)
+        counts[v.rule] += 1
+    return counts
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="reprolint: jit front-door + canonical-form contracts")
+    ap.add_argument("paths", nargs="*", default=["src/"],
+                    help="files or directories to lint (default: src/)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="baseline file (default: the committed one)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report every violation, ignore the baseline")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="accept current violations as the new baseline")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="counts and verdict only, no per-line output")
+    args = ap.parse_args(argv)
+
+    violations = lint_paths(args.paths or ["src/"])
+    baseline = collections.Counter() if args.no_baseline \
+        else load_baseline(args.baseline)
+    fresh = new_violations(violations, baseline)
+
+    if args.write_baseline:
+        write_baseline(args.baseline, violations)
+        print(f"baseline written: {len(violations)} entries -> "
+              f"{args.baseline}")
+        return 0
+
+    if not args.quiet:
+        for v in fresh:
+            print(v.render())
+    counts = per_rule_counts(violations)
+    fresh_counts = per_rule_counts(fresh)
+    print("reprolint per-rule counts (total / new):")
+    for rule in sorted(counts):
+        print(f"  {rule}: {counts[rule]} / {fresh_counts.get(rule, 0)}"
+              f"  — {RULES.get(rule, 'internal')}")
+    baselined = len(violations) - len(fresh)
+    print(f"{len(violations)} violation(s), {baselined} baselined, "
+          f"{len(fresh)} new")
+    return 1 if fresh else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -90,6 +90,15 @@ def restore(ckpt_dir: str, step: int, template: Any,
     ``shardings``: optional pytree (matching template) of NamedShardings —
     leaves are device_put under them, which is how elastic restore onto a
     resized mesh re-shards the state.
+
+    Under ``REPRO_CHECK=1`` the rebuilt tree is walked eagerly and every
+    associative-array state in it (HierAssoc nodes, free-standing
+    segments) is validated against the canonical-form/counter contracts
+    before the restore returns — a corrupted or hand-edited checkpoint
+    fails here, naming the violated invariant, instead of surfacing as
+    wrong merge results thousands of updates later.  This covers the
+    MIGRATED_LEAVES path too: a migrated template leaf that breaks the
+    counter contract is caught the same way.
     """
     d = os.path.join(ckpt_dir, f"step_{step}")
     with open(os.path.join(d, _MANIFEST)) as f:
@@ -128,7 +137,11 @@ def restore(ckpt_dir: str, step: int, template: Any,
         leaves.append(jax.device_put(arr, shd) if shd is not None
                       else jax.device_put(arr) if hasattr(tmpl, "dtype")
                       else arr)
-    return treedef.unflatten(leaves)
+    out = treedef.unflatten(leaves)
+    from repro.analysis import contracts
+    if contracts.enabled():
+        contracts.validate_restored(out, name=f"restore step_{step}")
+    return out
 
 
 class AsyncCheckpointer:

@@ -14,6 +14,35 @@ merges concatenate raw buffers without masking.
 
 All ops are pure, jit-safe and vmap-safe (instances dimension), matching the
 paper's share-nothing multi-instance design.
+
+CONTRACTS
+---------
+The invariants every producer and consumer of a segment trades on.  They
+are enforced mechanically: statically by ``repro.analysis.lint`` (rules
+R001-R005) and at trace time by ``repro.analysis.contracts`` under
+``REPRO_CHECK=1``; EXPERIMENTS.md cross-references this section.
+
+1. **Canonical form** (``sorted=True`` paths, every layer >= 1, and layer 0
+   outside lazy-append mode): entries [0, nnz) are sorted-unique by
+   (hi, lo) and contain no SENTINEL key.  Consumers may binary-search,
+   run-merge without re-sorting, and pass ``indices_are_sorted`` hints.
+2. **Sentinel tail**: slots [nnz, C) hold exactly (SENTINEL, SENTINEL,
+   semiring zero).  This is what lets ``merge``/``merge_many`` concatenate
+   whole buffers without masking — a single dirty tail slot silently
+   corrupts every downstream merge and reduction.
+3. **Raw-buffer contract** (``sorted=False`` paths — the lazy layer-0
+   append buffer, checkpoint-restored or externally built segments): ONLY
+   slots [0, nnz) are meaningful.  Entries there may be unsorted and
+   duplicated; the tail is not trusted.  Reductions over raw buffers must
+   gate live slots via ``_live_slots(seg, sorted=False)`` (the
+   ``arange(C) < nnz`` gate) — lint rule R005 flags reductions over
+   ``.val`` that do neither.
+4. **nnz bound**: 0 <= nnz <= C always; overflow is reported through the
+   separate ``overflow`` counters, never by letting nnz exceed capacity.
+5. **Counter words** (``hier.HierAssoc``): the raw-update total is a
+   (hi, lo) = (int32, uint32) carry pair — lo wraps mod 2**32, hi counts
+   wraps and is never negative; total live slots never exceed the 64-bit
+   update total.
 """
 from __future__ import annotations
 
@@ -178,7 +207,8 @@ def merge_kernel(a: AssocSegment, b: AssocSegment, out_capacity: int,
 
 def merge_many(segments, hi: Array, lo: Array, val: Array, *,
                out_capacity: int, sr: Semiring = sr_mod.PLUS_TIMES,
-               use_kernel: bool = False) -> Tuple[AssocSegment, Array]:
+               use_kernel: bool = False,
+               debug: bool = False) -> Tuple[AssocSegment, Array]:
     """Semiring-merge k canonical segments plus one RAW (unsorted, possibly
     duplicated, sentinel-masked) COO buffer in a SINGLE canonicalization.
 
@@ -187,8 +217,34 @@ def merge_many(segments, hi: Array, lo: Array, val: Array, *,
     are combined in one pass.  With ``use_kernel`` the Pallas multi-way
     merge is used below its capacity ceiling (the sorted runs are bitonic-
     merged, not re-sorted); otherwise one XLA co-sort does everything.
+
+    ``debug`` (or tracing inside ``contracts.activate()``) emits checkify
+    checks that every input run really is canonical — the precondition this
+    whole fusion trades on — and that the merged output is too.  Only legal
+    inside a ``checkify.checkify``-transformed program.
     """
     segments = tuple(segments)
+    if debug or _deep_checks_active():
+        from repro.analysis import contracts
+        for i, s in enumerate(segments):
+            contracts.check_canonical(s, sr, name=f"merge_many input run {i}")
+        out, ovf = _merge_many_impl(segments, hi, lo, val,
+                                    out_capacity=out_capacity, sr=sr,
+                                    use_kernel=use_kernel)
+        contracts.check_canonical(out, sr, name="merge_many output")
+        return out, ovf
+    return _merge_many_impl(segments, hi, lo, val, out_capacity=out_capacity,
+                            sr=sr, use_kernel=use_kernel)
+
+
+def _deep_checks_active() -> bool:
+    from repro.analysis import contracts
+    return contracts.deep_checks_active()
+
+
+def _merge_many_impl(segments, hi: Array, lo: Array, val: Array, *,
+                     out_capacity: int, sr: Semiring,
+                     use_kernel: bool) -> Tuple[AssocSegment, Array]:
     if use_kernel:
         from repro.kernels.hier_merge import ops as hm_ops
 
@@ -237,9 +293,15 @@ def clear(seg: AssocSegment, sr: Semiring = sr_mod.PLUS_TIMES) -> AssocSegment:
 # ---------------------------------------------------------------- queries ---
 
 def lookup(seg: AssocSegment, row, col,
-           sr: Semiring = sr_mod.PLUS_TIMES) -> Array:
-    """Point query A(row, col); semiring zero when absent."""
-    match = (seg.hi == row) & (seg.lo == col)
+           sr: Semiring = sr_mod.PLUS_TIMES, sorted: bool = True) -> Array:
+    """Point query A(row, col); semiring zero when absent.
+
+    ``sorted=False`` admits a RAW buffer (lazy layer-0 append buffer, or any
+    segment of unknown provenance): matches are additionally gated by the
+    ``nnz`` live-slot mask, so stale keys beyond the live prefix can never
+    alias a real (row, col) — the raw-buffer contract, see CONTRACTS.
+    """
+    match = (seg.hi == row) & (seg.lo == col) & _live_slots(seg, sorted)
     zero = sr_mod.integer_zero(sr, seg.dtype)
     return jnp.where(jnp.any(match),
                      jnp.sum(jnp.where(match, seg.val, zero), dtype=seg.dtype)
@@ -264,12 +326,13 @@ def _live_slots(seg: AssocSegment, sorted: bool) -> Array:
     externally constructed / checkpoint-restored segment) only promises
     that slots [0, nnz) are meaningful, so raw reductions must ALSO gate on
     ``arange(C) < nnz`` — the same live-slot gate ``engine._raw_point`` and
-    ``engine.extract_rows`` apply.  Every in-repo ingest path happens to
-    keep the tail sentinel-clean today (verified across fused/layered x
-    lazy x kernel x masked-wide-clobber in PR 5), but the raw-buffer
-    CONTRACT is nnz, not the tail, and trusting the tail made the analytics
-    reductions wrong for any state that doesn't uphold the stronger
-    invariant.
+    ``engine.extract_rows`` apply.  The in-repo ingest paths keep the tail
+    sentinel-clean — no longer just "verified once in PR 5" but enforced at
+    trace time by ``repro.analysis.contracts.check_canonical`` under
+    ``REPRO_CHECK=1`` and at lint time by rule R005 — but the raw-buffer
+    CONTRACT is still nnz, not the tail, and trusting the tail made the
+    analytics reductions wrong for any state that doesn't uphold the
+    stronger invariant.
     """
     valid = seg.hi != SENTINEL
     if not sorted:
@@ -347,10 +410,13 @@ def spmv_t(seg: AssocSegment, x: Array, num_cols: int,
 
 
 def to_dense(seg: AssocSegment, num_rows: int, num_cols: int,
-             sr: Semiring = sr_mod.PLUS_TIMES) -> Array:
+             sr: Semiring = sr_mod.PLUS_TIMES, sorted: bool = True) -> Array:
+    """Materialize the segment densely.  ``sorted=False`` marks a RAW buffer
+    and gates live slots by ``nnz`` instead of trusting the sentinel tail
+    (the PR 5 dirty-tail class — see CONTRACTS)."""
     zero = sr_mod.integer_zero(sr, seg.dtype)
     dense = jnp.full((num_rows, num_cols), zero, seg.dtype)
-    valid = seg.hi != SENTINEL
+    valid = _live_slots(seg, sorted)
     r = jnp.where(valid, seg.hi, 0)
     c = jnp.where(valid, seg.lo, 0)
     v = jnp.where(valid, seg.val, zero)
@@ -362,9 +428,13 @@ def to_dense(seg: AssocSegment, num_rows: int, num_cols: int,
         else dense.at[r, c].min(v)
 
 
-def total(seg: AssocSegment, sr: Semiring = sr_mod.PLUS_TIMES) -> Array:
+def total(seg: AssocSegment, sr: Semiring = sr_mod.PLUS_TIMES,
+          sorted: bool = True) -> Array:
+    """Reduce every live value with ``sr.add``.  ``sorted=False`` marks a
+    RAW buffer and gates live slots by ``nnz`` instead of trusting the
+    sentinel tail (see CONTRACTS)."""
     zero = sr_mod.integer_zero(sr, seg.dtype)
-    vals = jnp.where(seg.hi != SENTINEL, seg.val, zero)
+    vals = jnp.where(_live_slots(seg, sorted), seg.val, zero)
     if sr.name == "plus.times":
         return jnp.sum(vals)
     return jnp.max(vals) if sr.name in ("max.plus", "max.min") else jnp.min(vals)

@@ -44,6 +44,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import stages
+from repro.analysis import contracts
 from repro.core import assoc
 from repro.core import semiring as sr_mod
 from repro.core.assoc import AssocSegment
@@ -531,13 +532,26 @@ def update(h: HierAssoc, rows: Array, cols: Array, vals: Array,
         h, sr=sr, use_kernel=use_kernel, lazy_l0=lazy_l0, fused=fused,
         batch_mode=batch_mode,
         allowed_batch_modes=("switch", "branchfree"))
+    if contracts.enabled() and not stages.is_tracing(h, rows, cols, vals,
+                                                     mask):
+        err, out = update_wrapped(contracts.debug_signature(sig))(
+            h, rows, cols, vals, mask)
+        contracts.throw(err)
+        return out
     return update_wrapped(sig)(h, rows, cols, vals, mask)
 
 
 def update_wrapped(sig: stages.Signature) -> stages.Wrapped:
     """Keyed block-update program for one config signature (the staged
     front door ``update`` routes through; ``stages.precompile_fleet``
-    warms it directly)."""
+    warms it directly).
+
+    A signature carrying ``contracts.DEBUG_EXTRA`` returns the checkified
+    sanitizer build — same program plus contract checks on the input and
+    output state and on every internal merge; it returns ``(err, out)``
+    and keys a SEPARATE cache entry, so the production key's program never
+    contains a check.
+    """
     sr = sr_mod.get(sig.sr)
     use_kernel, lazy_l0 = sig.use_kernel, sig.lazy_l0
 
@@ -566,6 +580,16 @@ def update_wrapped(sig: stages.Signature) -> stages.Wrapped:
         )
         return _cascade(h2, sr, use_kernel, lazy_l0)
 
+    if contracts.sig_debug(sig):
+        def checked(h, rows, cols, vals, mask):
+            contracts.check_hier(h, sr, l0_sorted=not lazy_l0,
+                                 name="hier.update input")
+            with contracts.activate():
+                out = run(h, rows, cols, vals, mask)
+            contracts.check_hier(out, sr, l0_sorted=not lazy_l0,
+                                 name="hier.update output")
+            return out
+        return stages.wrap(contracts.checkified(checked), "hier.update", sig)
     return stages.wrap(run, "hier.update", sig)
 
 
@@ -653,9 +677,13 @@ def lookup_layered(h: HierAssoc, row, col,
 
     Kept as the engine's oracle (and for lazy layer-0 buffers it is
     trivially correct: ``assoc.lookup`` under plus.times sums every
-    matching slot, duplicates included).
+    matching slot, duplicates included).  Layer 0 is queried under the
+    raw-buffer contract (``sorted=False`` — live slots gated by ``nnz``),
+    which is valid whether it is a lazy append buffer or canonical; deeper
+    layers are always canonical.
     """
-    vals = [assoc.lookup(l, row, col, sr) for l in h.layers]
+    vals = [assoc.lookup(l, row, col, sr, sorted=i > 0)
+            for i, l in enumerate(h.layers)]
     out = vals[0]
     for v in vals[1:]:
         out = sr.add(out, v)
@@ -707,17 +735,35 @@ def flush(h: HierAssoc, sr: Semiring = sr_mod.PLUS_TIMES,
     """
     sig = stages.signature_for_state(h, sr=sr, use_kernel=use_kernel,
                                      lazy_l0=lazy_l0, fused=fused)
+    if contracts.enabled() and not stages.is_tracing(h):
+        err, out = flush_wrapped(contracts.debug_signature(sig))(h)
+        contracts.throw(err)
+        return out
     return flush_wrapped(sig)(h)
 
 
 def flush_wrapped(sig: stages.Signature) -> stages.Wrapped:
-    """Keyed force-spill program for one config signature."""
+    """Keyed force-spill program for one config signature.  A signature
+    carrying ``contracts.DEBUG_EXTRA`` returns the checkified sanitizer
+    build (see ``update_wrapped``)."""
     sr = sr_mod.get(sig.sr)
     use_kernel, lazy_l0, fused = sig.use_kernel, sig.lazy_l0, sig.fused
 
     def run(h):
         return _flush_body(h, sr, use_kernel, lazy_l0, fused)
 
+    if contracts.sig_debug(sig):
+        def checked(h):
+            contracts.check_hier(h, sr, l0_sorted=not lazy_l0,
+                                 name="hier.flush input")
+            with contracts.activate():
+                out = run(h)
+            # Every layer of a drained hierarchy is canonical, including
+            # layer 0 (emptied), regardless of the append discipline.
+            contracts.check_hier(out, sr, l0_sorted=True,
+                                 name="hier.flush output")
+            return out
+        return stages.wrap(contracts.checkified(checked), "hier.flush", sig)
     return stages.wrap(run, "hier.flush", sig)
 
 

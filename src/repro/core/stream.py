@@ -45,6 +45,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import stages
+from repro.analysis import contracts
 from repro.core import assoc, hier
 from repro.core import semiring as sr_mod
 from repro.core.hier import HierAssoc
@@ -253,6 +254,7 @@ def _grouped_execute(states: HierAssoc, rows: Array, cols: Array, vals: Array,
                 may_not_fit=may_not_fit))(s, rows, cols, vals, n_live)
         return _select_depth0_leaves(s, s0, take0)
 
+    # reprolint: allow(R002) batch-level cond on a per-batch scalar; this function IS the batched layout and never runs under vmap
     cur = jax.lax.cond(jnp.any(take0), depth0_pass, lambda s: s, states)
 
     order = jnp.argsort(depths).astype(jnp.int32)
@@ -293,6 +295,7 @@ def _grouped_execute(states: HierAssoc, rows: Array, cols: Array, vals: Array,
                 n_updates=put(carry.n_updates, out.n_updates),
                 n_updates_hi=put(carry.n_updates_hi, out.n_updates_hi))
 
+        # reprolint: allow(R002) batch-level cohort skip on a per-batch scalar count; never reached under vmap (see docstring)
         return jax.lax.cond(
             n_d > 0,
             lambda s: jax.lax.fori_loop(0, n_d, body, s),
@@ -347,6 +350,15 @@ def update_instances(states: HierAssoc, rows: Array, cols: Array, vals: Array,
         states, sr=sr, use_kernel=use_kernel, lazy_l0=lazy_l0,
         batch_mode=batch_mode, allowed_batch_modes=("grouped", "bucketed"),
         extra=(("masked", mask is not None),))
+    if contracts.enabled() and not stages.is_tracing(states, rows, cols,
+                                                     vals, mask):
+        dsig = contracts.debug_signature(sig)
+        err, out = stages.dispatch(
+            "stream.update_instances", dsig,
+            lambda: _update_instances_impl(dsig),
+            states, rows, cols, vals, mask)
+        contracts.throw(err)
+        return out
     return stages.dispatch(
         "stream.update_instances", sig,
         lambda: _update_instances_impl(sig), states, rows, cols, vals, mask)
@@ -360,7 +372,30 @@ def _update_instances_impl(sig: stages.Signature):
     def run(states, rows, cols, vals, mask):
         return _update_instances_body(states, rows, cols, vals, sr,
                                       use_kernel, lazy_l0, batch_mode, mask)
-    return run
+
+    if not contracts.sig_debug(sig):
+        return run
+
+    def checked(states, rows, cols, vals, mask):
+        contracts.check_hier(states, sr, l0_sorted=not lazy_l0,
+                             name="stream.update_instances input")
+        # Re-derive the spill plan the executor trusts to slice layers and
+        # bound-check it against the static hierarchy depth.
+        prep = jax.vmap(
+            lambda h, r, c, v, m: hier._prepare_block(h, r, c, v, m, sr),
+            in_axes=(0, 0, 0, 0, None if mask is None else 0))
+        _, _, _, n_live = prep(states, rows, cols, vals, mask)
+        depths = jax.vmap(hier._plan_spill_depth, in_axes=(0, 0))(
+            states, n_live)
+        contracts.check_plan(depths, states.cuts,
+                             name="stream.update_instances")
+        with contracts.activate():
+            out = run(states, rows, cols, vals, mask)
+        contracts.check_hier(out, sr, l0_sorted=not lazy_l0,
+                             name="stream.update_instances output")
+        return out
+
+    return contracts.checkified(checked)
 
 
 def _update_instances_body(states, rows, cols, vals, sr, use_kernel,

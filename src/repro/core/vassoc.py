@@ -101,11 +101,19 @@ def clear(seg: VecSegment) -> VecSegment:
     return empty(seg.capacity, seg.dim, seg.val.dtype)
 
 
-def scatter_apply(table: Array, seg: VecSegment, scale: float | Array = 1.0
-                  ) -> Array:
-    """table[key] += scale * val for live entries (batched HBM apply)."""
+def scatter_apply(table: Array, seg: VecSegment, scale: float | Array = 1.0,
+                  sorted: bool = True) -> Array:
+    """table[key] += scale * val for live entries (batched HBM apply).
+
+    ``sorted=False`` admits a RAW buffer (unknown provenance, e.g. a
+    restored checkpoint): live entries are additionally gated by ``nnz``
+    instead of trusting the sentinel tail — the raw-buffer contract, see
+    the CONTRACTS section of ``repro/core/assoc.py``."""
     safe = jnp.clip(seg.key, 0, table.shape[0] - 1)
-    contrib = jnp.where((seg.key != SENTINEL)[:, None], seg.val, 0)
+    live = seg.key != SENTINEL
+    if not sorted:
+        live &= jnp.arange(seg.capacity) < seg.nnz
+    contrib = jnp.where(live[:, None], seg.val, 0)
     return table.at[safe].add((scale * contrib).astype(table.dtype))
 
 

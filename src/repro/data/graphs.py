@@ -15,52 +15,69 @@ keep shapes static under jit; aggregation dedups by construction).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro import stages
 from repro.data.powerlaw import GRAPH500, rmat_edges
 
 
-@partial(jax.jit, static_argnames=("n_nodes", "n_edges", "d_feat",
-                                   "n_classes", "symmetric"))
 def random_graph(key: jax.Array, n_nodes: int, n_edges: int, d_feat: int,
                  n_classes: int = 16, symmetric: bool = True):
     """Power-law graph with node features/labels (full-batch training)."""
-    ke, kf, kl = jax.random.split(key, 3)
-    scale = max(1, (n_nodes - 1).bit_length())
-    src, dst = rmat_edges(ke, n_edges, scale)
-    src, dst = src % n_nodes, dst % n_nodes
-    if symmetric:  # undirected message passing: use half fwd, half reversed
-        half = n_edges // 2
-        src, dst = (jnp.concatenate([src[:half], dst[half:]]),
-                    jnp.concatenate([dst[:half], src[half:]]))
-    feat = jax.random.normal(kf, (n_nodes, d_feat), jnp.float32)
-    labels = jax.random.randint(kl, (n_nodes,), 0, n_classes)
-    return dict(node_feat=feat, edge_src=src.astype(jnp.int32),
-                edge_dst=dst.astype(jnp.int32),
-                labels=labels.astype(jnp.int32))
+    n_nodes, n_edges, d_feat = int(n_nodes), int(n_edges), int(d_feat)
+    n_classes, symmetric = int(n_classes), bool(symmetric)
+    sig = stages.signature_of(
+        extra=(("n_nodes", n_nodes), ("n_edges", n_edges),
+               ("d_feat", d_feat), ("n_classes", n_classes),
+               ("symmetric", symmetric)))
+
+    def body(key):
+        ke, kf, kl = jax.random.split(key, 3)
+        scale = max(1, (n_nodes - 1).bit_length())
+        src, dst = rmat_edges(ke, n_edges, scale)
+        src, dst = src % n_nodes, dst % n_nodes
+        if symmetric:  # undirected message passing: half fwd, half reversed
+            half = n_edges // 2
+            src, dst = (jnp.concatenate([src[:half], dst[half:]]),
+                        jnp.concatenate([dst[:half], src[half:]]))
+        feat = jax.random.normal(kf, (n_nodes, d_feat), jnp.float32)
+        labels = jax.random.randint(kl, (n_nodes,), 0, n_classes)
+        return dict(node_feat=feat, edge_src=src.astype(jnp.int32),
+                    edge_dst=dst.astype(jnp.int32),
+                    labels=labels.astype(jnp.int32))
+
+    return stages.dispatch("data.random_graph", sig, lambda: body, key)
 
 
-@partial(jax.jit, static_argnames=("n_graphs", "n_nodes", "n_edges",
-                                   "d_feat", "n_classes"))
 def batched_molecules(key: jax.Array, n_graphs: int, n_nodes: int,
                       n_edges: int, d_feat: int, n_classes: int = 2):
     """Batch of small graphs packed into one edge list with id offsets."""
-    kf, ke, kl = jax.random.split(key, 3)
-    feat = jax.random.normal(kf, (n_graphs * n_nodes, d_feat))
-    ks, kd = jax.random.split(ke)
-    src = jax.random.randint(ks, (n_graphs, n_edges), 0, n_nodes)
-    dst = jax.random.randint(kd, (n_graphs, n_edges), 0, n_nodes)
-    offset = (jnp.arange(n_graphs) * n_nodes)[:, None]
-    graph_ids = jnp.repeat(jnp.arange(n_graphs, dtype=jnp.int32), n_nodes)
-    labels = jax.random.randint(kl, (n_graphs,), 0, n_classes)
-    return dict(node_feat=feat,
-                edge_src=(src + offset).reshape(-1).astype(jnp.int32),
-                edge_dst=(dst + offset).reshape(-1).astype(jnp.int32),
-                graph_ids=graph_ids, labels=labels.astype(jnp.int32))
+    n_graphs, n_nodes, n_edges = int(n_graphs), int(n_nodes), int(n_edges)
+    d_feat, n_classes = int(d_feat), int(n_classes)
+    sig = stages.signature_of(
+        extra=(("n_graphs", n_graphs), ("n_nodes", n_nodes),
+               ("n_edges", n_edges), ("d_feat", d_feat),
+               ("n_classes", n_classes)))
+
+    def body(key):
+        kf, ke, kl = jax.random.split(key, 3)
+        feat = jax.random.normal(kf, (n_graphs * n_nodes, d_feat))
+        ks, kd = jax.random.split(ke)
+        src = jax.random.randint(ks, (n_graphs, n_edges), 0, n_nodes)
+        dst = jax.random.randint(kd, (n_graphs, n_edges), 0, n_nodes)
+        offset = (jnp.arange(n_graphs) * n_nodes)[:, None]
+        graph_ids = jnp.repeat(jnp.arange(n_graphs, dtype=jnp.int32),
+                               n_nodes)
+        labels = jax.random.randint(kl, (n_graphs,), 0, n_classes)
+        return dict(node_feat=feat,
+                    edge_src=(src + offset).reshape(-1).astype(jnp.int32),
+                    edge_dst=(dst + offset).reshape(-1).astype(jnp.int32),
+                    graph_ids=graph_ids, labels=labels.astype(jnp.int32))
+
+    return stages.dispatch("data.batched_molecules", sig, lambda: body, key)
 
 
 def to_csr(src: jax.Array, dst: jax.Array, n_nodes: int):
@@ -72,7 +89,6 @@ def to_csr(src: jax.Array, dst: jax.Array, n_nodes: int):
     return indptr, dst_s.astype(jnp.int32)
 
 
-@partial(jax.jit, static_argnames=("fanouts",))
 def sample_node_flow(key: jax.Array, indptr: jax.Array, indices: jax.Array,
                      seeds: jax.Array, fanouts: Tuple[int, ...]):
     """GraphSAGE fanout sampling with replacement.
@@ -82,18 +98,25 @@ def sample_node_flow(key: jax.Array, indptr: jax.Array, indices: jax.Array,
     frontiers[l] (row-major: node i's samples at [i*f, (i+1)*f)).  Nodes with
     degree 0 replicate themselves (self-loop semantics, mask-free shapes).
     """
-    frontiers = [seeds.astype(jnp.int32)]
-    cur = frontiers[0]
-    for l, f in enumerate(fanouts):
-        k = jax.random.fold_in(key, l)
-        deg = indptr[cur + 1] - indptr[cur]                     # [Nf]
-        draw = jax.random.randint(k, (cur.shape[0], f), 0, 1 << 30)
-        slot = indptr[cur][:, None] + draw % jnp.maximum(deg[:, None], 1)
-        nbr = indices[jnp.clip(slot, 0, indices.shape[0] - 1)]  # [Nf, f]
-        nbr = jnp.where(deg[:, None] > 0, nbr, cur[:, None])    # isolated
-        cur = nbr.reshape(-1)
-        frontiers.append(cur)
-    return tuple(frontiers)
+    fanouts = tuple(int(f) for f in fanouts)
+    sig = stages.signature_of(extra=(("fanouts", fanouts),))
+
+    def body(key, indptr, indices, seeds):
+        frontiers = [seeds.astype(jnp.int32)]
+        cur = frontiers[0]
+        for l, f in enumerate(fanouts):
+            k = jax.random.fold_in(key, l)
+            deg = indptr[cur + 1] - indptr[cur]                     # [Nf]
+            draw = jax.random.randint(k, (cur.shape[0], f), 0, 1 << 30)
+            slot = indptr[cur][:, None] + draw % jnp.maximum(deg[:, None], 1)
+            nbr = indices[jnp.clip(slot, 0, indices.shape[0] - 1)]  # [Nf, f]
+            nbr = jnp.where(deg[:, None] > 0, nbr, cur[:, None])    # isolated
+            cur = nbr.reshape(-1)
+            frontiers.append(cur)
+        return tuple(frontiers)
+
+    return stages.dispatch("data.sample_node_flow", sig, lambda: body,
+                           key, indptr, indices, seeds)
 
 
 def flow_edges(frontiers: Sequence[jax.Array], fanouts: Tuple[int, ...]):

@@ -8,20 +8,31 @@ JAX: one categorical draw per (edge, scale-bit).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro import stages
+
 GRAPH500 = (0.57, 0.19, 0.19, 0.05)
 
 
-@partial(jax.jit, static_argnames=("n_edges", "scale", "params"))
 def rmat_edges(key: jax.Array, n_edges: int, scale: int,
                params: Tuple[float, float, float, float] = GRAPH500
                ) -> Tuple[jax.Array, jax.Array]:
     """Sample n_edges (row, col) pairs on a 2^scale x 2^scale vertex grid."""
+    n_edges, scale = int(n_edges), int(scale)
+    params = tuple(float(p) for p in params)
+    sig = stages.signature_of(extra=(("n_edges", n_edges), ("scale", scale),
+                                     ("params", params)))
+    return stages.dispatch(
+        "data.rmat_edges", sig,
+        lambda: lambda key: _rmat_edges_body(key, n_edges, scale, params),
+        key)
+
+
+def _rmat_edges_body(key, n_edges, scale, params):
     probs = jnp.asarray(params)
     quad = jax.random.categorical(
         key, jnp.log(probs), shape=(n_edges, scale))      # [E, S] in {0..3}
@@ -33,18 +44,26 @@ def rmat_edges(key: jax.Array, n_edges: int, scale: int,
     return rows, cols
 
 
-@partial(jax.jit, static_argnames=("n_blocks", "block_size", "scale",
-                                   "params"))
 def rmat_stream(key: jax.Array, n_blocks: int, block_size: int, scale: int,
                 params: Tuple[float, float, float, float] = GRAPH500):
     """The paper's per-instance stream: [T, B] update blocks with unit values.
 
     (T=1000, B=100000, total 1e8 for the full-size experiment.)
     """
-    rows, cols = rmat_edges(key, n_blocks * block_size, scale, params)
-    vals = jnp.ones((n_blocks, block_size), jnp.float32)
-    return (rows.reshape(n_blocks, block_size),
-            cols.reshape(n_blocks, block_size), vals)
+    n_blocks, block_size, scale = int(n_blocks), int(block_size), int(scale)
+    params = tuple(float(p) for p in params)
+    sig = stages.signature_of(
+        block_size=block_size,
+        extra=(("n_blocks", n_blocks), ("scale", scale), ("params", params)))
+
+    def body(key):
+        rows, cols = _rmat_edges_body(key, n_blocks * block_size, scale,
+                                      params)
+        vals = jnp.ones((n_blocks, block_size), jnp.float32)
+        return (rows.reshape(n_blocks, block_size),
+                cols.reshape(n_blocks, block_size), vals)
+
+    return stages.dispatch("data.rmat_stream", sig, lambda: body, key)
 
 
 def instance_streams(key: jax.Array, n_instances: int, n_blocks: int,

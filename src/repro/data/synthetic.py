@@ -7,21 +7,27 @@ measurably decrease in the examples.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
 
+from repro import stages
 
-@partial(jax.jit, static_argnames=("batch", "seq_len", "vocab"))
+
 def token_batch(key: jax.Array, batch: int, seq_len: int, vocab: int):
     """Zipf-distributed tokens; labels = next token (causal LM)."""
-    ranks = jnp.arange(1, vocab + 1, dtype=jnp.float32)
-    logits = -1.1 * jnp.log(ranks)                  # zipf(1.1) over ids
-    toks = jax.random.categorical(key, logits, shape=(batch, seq_len + 1))
-    return dict(tokens=toks[:, :-1].astype(jnp.int32),
-                labels=toks[:, 1:].astype(jnp.int32))
+    batch, seq_len, vocab = int(batch), int(seq_len), int(vocab)
+    sig = stages.signature_of(extra=(("batch", batch), ("seq_len", seq_len),
+                                     ("vocab", vocab)))
+
+    def body(key):
+        ranks = jnp.arange(1, vocab + 1, dtype=jnp.float32)
+        logits = -1.1 * jnp.log(ranks)              # zipf(1.1) over ids
+        toks = jax.random.categorical(key, logits,
+                                      shape=(batch, seq_len + 1))
+        return dict(tokens=toks[:, :-1].astype(jnp.int32),
+                    labels=toks[:, 1:].astype(jnp.int32))
+
+    return stages.dispatch("data.token_batch", sig, lambda: body, key)
 
 
 def token_stream(key: jax.Array, steps: int, batch: int, seq_len: int,
@@ -31,8 +37,6 @@ def token_stream(key: jax.Array, steps: int, batch: int, seq_len: int,
         yield token_batch(jax.random.fold_in(key, i), batch, seq_len, vocab)
 
 
-@partial(jax.jit, static_argnames=("batch", "n_dense", "n_sparse",
-                                   "vocab_per_field", "multi_hot"))
 def recsys_batch(key: jax.Array, batch: int, n_dense: int = 13,
                  n_sparse: int = 26, vocab_per_field: int = 1_000_000,
                  multi_hot: int = 1):
@@ -41,18 +45,28 @@ def recsys_batch(key: jax.Array, batch: int, n_dense: int = 13,
     Labels come from a fixed random logistic teacher over the dense features
     and a hash of the sparse ids, so examples can show loss decreasing.
     """
-    kd, ks, kt = jax.random.split(key, 3)
-    dense = jax.random.normal(kd, (batch, n_dense))
-    # zipf-ish ids: floor(exp(u * log V)) concentrates mass on small ids
-    u = jax.random.uniform(ks, (batch, n_sparse, multi_hot))
-    sparse = jnp.floor(jnp.exp(u * jnp.log(float(vocab_per_field)))
-                       ).astype(jnp.int32) % vocab_per_field
-    w = jax.random.normal(jax.random.PRNGKey(7), (n_dense,))
-    sig = (dense @ w) / jnp.sqrt(n_dense) + 0.1 * jnp.sin(
-        jnp.sum(sparse[..., 0], axis=1) / 1000.0)
-    labels = (jax.random.uniform(kt, (batch,)) <
-              jax.nn.sigmoid(sig)).astype(jnp.float32)
-    return dict(dense=dense, sparse=sparse, labels=labels)
+    batch, n_dense, n_sparse = int(batch), int(n_dense), int(n_sparse)
+    vocab_per_field, multi_hot = int(vocab_per_field), int(multi_hot)
+    sig = stages.signature_of(
+        extra=(("batch", batch), ("n_dense", n_dense),
+               ("n_sparse", n_sparse), ("vocab_per_field", vocab_per_field),
+               ("multi_hot", multi_hot)))
+
+    def body(key):
+        kd, ks, kt = jax.random.split(key, 3)
+        dense = jax.random.normal(kd, (batch, n_dense))
+        # zipf-ish ids: floor(exp(u * log V)) concentrates mass on small ids
+        u = jax.random.uniform(ks, (batch, n_sparse, multi_hot))
+        sparse = jnp.floor(jnp.exp(u * jnp.log(float(vocab_per_field)))
+                           ).astype(jnp.int32) % vocab_per_field
+        w = jax.random.normal(jax.random.PRNGKey(7), (n_dense,))
+        teacher = (dense @ w) / jnp.sqrt(n_dense) + 0.1 * jnp.sin(
+            jnp.sum(sparse[..., 0], axis=1) / 1000.0)
+        labels = (jax.random.uniform(kt, (batch,)) <
+                  jax.nn.sigmoid(teacher)).astype(jnp.float32)
+        return dict(dense=dense, sparse=sparse, labels=labels)
+
+    return stages.dispatch("data.recsys_batch", sig, lambda: body, key)
 
 
 def recsys_stream(key: jax.Array, steps: int, batch: int, **kw):
@@ -60,9 +74,16 @@ def recsys_stream(key: jax.Array, steps: int, batch: int, **kw):
         yield recsys_batch(jax.random.fold_in(key, i), batch, **kw)
 
 
-@partial(jax.jit, static_argnames=("batch", "n_candidates", "dim"))
 def retrieval_batch(key: jax.Array, batch: int, n_candidates: int, dim: int):
     """Retrieval-scoring shape: queries [B, D] vs candidate matrix [N, D]."""
-    kq, kc = jax.random.split(key)
-    return dict(query=jax.random.normal(kq, (batch, dim)),
-                candidates=jax.random.normal(kc, (n_candidates, dim)))
+    batch, n_candidates, dim = int(batch), int(n_candidates), int(dim)
+    sig = stages.signature_of(
+        extra=(("batch", batch), ("n_candidates", n_candidates),
+               ("dim", dim)))
+
+    def body(key):
+        kq, kc = jax.random.split(key)
+        return dict(query=jax.random.normal(kq, (batch, dim)),
+                    candidates=jax.random.normal(kc, (n_candidates, dim)))
+
+    return stages.dispatch("data.retrieval_batch", sig, lambda: body, key)

@@ -16,6 +16,7 @@ from repro.kernels.embedding_bag import ref
 from repro.kernels.embedding_bag.embedding_bag import embedding_bag_pallas
 
 
+# reprolint: allow(R001) leaf kernel dispatch below the stages layer; callers reach it through a stages-wrapped front door
 @functools.partial(jax.jit, static_argnames=("combiner", "use_kernel",
                                              "interpret"))
 def embedding_bag(table, indices, weights=None, mask=None, *,

@@ -62,6 +62,7 @@ def _finalize(hi, lo, val, nnz, out_capacity: int, zero):
     return hi, lo, val, jnp.minimum(nnz, out_capacity), overflow
 
 
+# reprolint: allow(R001) leaf kernel dispatch below the stages layer; callers reach it through a stages-wrapped front door
 @functools.partial(jax.jit, static_argnames=("out_capacity", "sr_name",
                                              "use_kernel", "interpret"))
 def merge(hi_a, lo_a, val_a, hi_b, lo_b, val_b, *, out_capacity: int,
@@ -88,6 +89,7 @@ def merge(hi_a, lo_a, val_a, hi_b, lo_b, val_b, *, out_capacity: int,
     return _finalize(hi, lo, val, nnz[0], out_capacity, zero)
 
 
+# reprolint: allow(R001) leaf kernel dispatch below the stages layer; callers reach it through a stages-wrapped front door
 @functools.partial(jax.jit, static_argnames=("out_capacity", "sr_name",
                                              "use_kernel", "interpret"))
 def merge_multi(block_hi, block_lo, block_val, *run_arrays,

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import stages
 from repro.configs import (D4M_SHAPES, GNN_SHAPES, LM_SHAPES, RECSYS_SHAPES,
                            family, get_config)
 from repro.distribution.sharding import (lm_param_specs, gnn_param_specs,
@@ -36,6 +37,16 @@ class SkipCell(Exception):
 
 def sds(shape, dtype):
     return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _cell_sig(arch: str, shape: str, mesh: Mesh, variant: str
+              ) -> stages.Signature:
+    """Signature for one dry-run cell: (arch, shape, variant) plus the mesh
+    layout distinguish every lowered program (the sharding pytrees also ride
+    in the jit-kwargs half of the stage-cache key)."""
+    return stages.signature_of(
+        mesh=mesh, extra=(("arch", arch), ("shape", shape),
+                          ("variant", variant)))
 
 
 def _ns(mesh: Mesh, *axes) -> NamedSharding:
@@ -104,10 +115,12 @@ def _lm_cell(arch: str, shape: str, mesh: Mesh, variant: str = "baseline"
                              labels=sds((B, S), I32))
             batch_sh = dict(tokens=batch_sp, labels=batch_sp)
             step = tf.make_train_step(cfg, AdamWConfig())
-            jitted = jax.jit(step, donate_argnums=(0, 1),
-                             in_shardings=(param_sh, opt_sh, batch_sh),
-                             out_shardings=(param_sh, opt_sh, None))
-            lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+            wrapped = stages.wrap(
+                step, "cells.lm_train", _cell_sig(arch, shape, mesh, variant),
+                donate_argnums=(0, 1),
+                in_shardings=(param_sh, opt_sh, batch_sh),
+                out_shardings=(param_sh, opt_sh, None))
+            lowered = wrapped.lower(params_abs, opt_abs, batch_abs)
             meta["model_flops"] = 6.0 * cfg.n_active_params * n_tokens
         elif info["kind"] == "prefill":
             import dataclasses as _dc
@@ -124,11 +137,13 @@ def _lm_cell(arch: str, shape: str, mesh: Mesh, variant: str = "baseline"
                 return fn(params, tokens)
 
             cache_sh = lm_cache_spec(cfg, mesh, policy, S)
-            jitted = jax.jit(
-                run, in_shardings=(param_sh, _ns(mesh, policy.batch_axes)),
+            wrapped = stages.wrap(
+                run, "cells.lm_prefill",
+                _cell_sig(arch, shape, mesh, variant),
+                in_shardings=(param_sh, _ns(mesh, policy.batch_axes)),
                 out_shardings=((_ns(mesh, policy.batch_axes), cache_sh,
                                 _ns(mesh))))
-            lowered = jitted.lower(params_abs, tokens_abs)
+            lowered = wrapped.lower(params_abs, tokens_abs)
             meta["model_flops"] = 2.0 * cfg.n_active_params * n_tokens
         elif info["kind"] == "decode":
             cache_abs = jax.eval_shape(lambda: tf.init_cache(cfg, B, S))
@@ -138,12 +153,13 @@ def _lm_cell(arch: str, shape: str, mesh: Mesh, variant: str = "baseline"
             def run(params, token, cache, cache_len):
                 return tf.decode_step(params, token, cache, cache_len, cfg)
 
-            jitted = jax.jit(
-                run, donate_argnums=(2,),
+            wrapped = stages.wrap(
+                run, "cells.lm_decode",
+                _cell_sig(arch, shape, mesh, variant), donate_argnums=(2,),
                 in_shardings=(param_sh, batch_sp, cache_sh, _ns(mesh)),
                 out_shardings=(batch_sp, cache_sh))
-            lowered = jitted.lower(params_abs, token_abs, cache_abs,
-                                   sds((), I32))
+            lowered = wrapped.lower(params_abs, token_abs, cache_abs,
+                                    sds((), I32))
             meta["model_flops"] = 2.0 * cfg.n_active_params * B \
                 + 2.0 * _kv_read_flops(cfg, B, S)
             meta["tokens"] = B
@@ -267,10 +283,12 @@ def _gnn_cell(arch: str, shape: str, mesh: Mesh, variant: str = "baseline"
     batch_sh = {k: _bsh(mesh, bax, v) for k, v in batch_abs.items()}
     step = gnn.make_train_step(cfg, AdamWConfig(), task, seed_count)
     with use_policy(policy):
-        jitted = jax.jit(step, donate_argnums=(0, 1),
-                         in_shardings=(param_sh, opt_sh, batch_sh),
-                         out_shardings=(param_sh, opt_sh, None))
-        lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+        wrapped = stages.wrap(
+            step, "cells.gnn_train", _cell_sig(arch, shape, mesh, variant),
+            donate_argnums=(0, 1),
+            in_shardings=(param_sh, opt_sh, batch_sh),
+            out_shardings=(param_sh, opt_sh, None))
+        lowered = wrapped.lower(params_abs, opt_abs, batch_abs)
 
     e = batch_abs["edge_src"].shape[0]
     n = batch_abs["node_feat"].shape[0]
@@ -329,20 +347,25 @@ def _recsys_cell(arch: str, shape: str, mesh: Mesh,
                 opt_sh = _opt_shardings(mesh, rest_sh)
                 hs_sh = jax.tree.map(lambda _: _ns(mesh), hstate_abs)
                 step = dcn.make_train_step_hier(cfg, AdamWConfig())
-                jitted = jax.jit(
-                    step, donate_argnums=(0, 1, 2),
+                wrapped = stages.wrap(
+                    step, "cells.recsys_train_hier",
+                    _cell_sig(arch, shape, mesh, variant),
+                    donate_argnums=(0, 1, 2),
                     in_shardings=(param_sh, opt_sh, hs_sh, batch_sh),
                     out_shardings=(param_sh, opt_sh, hs_sh, None))
-                lowered = jitted.lower(params_abs, opt_abs, hstate_abs,
-                                       batch_abs)
+                lowered = wrapped.lower(params_abs, opt_abs, hstate_abs,
+                                        batch_abs)
             else:
                 opt_abs = jax.eval_shape(adamw_init, params_abs)
                 opt_sh = _opt_shardings(mesh, param_sh)
                 step = dcn.make_train_step(cfg, AdamWConfig())
-                jitted = jax.jit(step, donate_argnums=(0, 1),
-                                 in_shardings=(param_sh, opt_sh, batch_sh),
-                                 out_shardings=(param_sh, opt_sh, None))
-                lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+                wrapped = stages.wrap(
+                    step, "cells.recsys_train",
+                    _cell_sig(arch, shape, mesh, variant),
+                    donate_argnums=(0, 1),
+                    in_shardings=(param_sh, opt_sh, batch_sh),
+                    out_shardings=(param_sh, opt_sh, None))
+                lowered = wrapped.lower(params_abs, opt_abs, batch_abs)
             meta["model_flops"] = 3.0 * B * fwd_flops_per_ex
         elif info["kind"] == "serve":
             serve_abs = {k: v for k, v in batch_abs.items()
@@ -352,9 +375,12 @@ def _recsys_cell(arch: str, shape: str, mesh: Mesh,
             def run(params, batch):
                 return dcn.serve_scores(params, batch, cfg)
 
-            jitted = jax.jit(run, in_shardings=(param_sh, serve_sh),
-                             out_shardings=_ns(mesh, bax))
-            lowered = jitted.lower(params_abs, serve_abs)
+            wrapped = stages.wrap(
+                run, "cells.recsys_serve",
+                _cell_sig(arch, shape, mesh, variant),
+                in_shardings=(param_sh, serve_sh),
+                out_shardings=_ns(mesh, bax))
+            lowered = wrapped.lower(params_abs, serve_abs)
             meta["model_flops"] = B * fwd_flops_per_ex
         elif info["kind"] == "retrieval":
             nc = _pad256(info["n_candidates"])   # 1M -> 256-divisible
@@ -366,10 +392,12 @@ def _recsys_cell(arch: str, shape: str, mesh: Mesh,
             def run(params, batch, cands):
                 return dcn.retrieval_topk(params, batch, cands, cfg, k=100)
 
-            jitted = jax.jit(
-                run, in_shardings=(param_sh, q_sh, cand_sh),
+            wrapped = stages.wrap(
+                run, "cells.recsys_retrieval",
+                _cell_sig(arch, shape, mesh, variant),
+                in_shardings=(param_sh, q_sh, cand_sh),
                 out_shardings=None)
-            lowered = jitted.lower(
+            lowered = wrapped.lower(
                 params_abs, {k: batch_abs[k] for k in ("dense", "sparse")},
                 cand_abs)
             meta["model_flops"] = B * fwd_flops_per_ex \

@@ -113,12 +113,22 @@ def main():
                    labels=NamedSharding(mesh, P(bax)))
         grad_fn = jax.value_and_grad(partial(tf.loss_fn, cfg=pcfg),
                                      has_aux=True)
+        from repro import stages
+        sig = stages.signature_of(
+            mesh=mesh, extra=(("arch", args.arch), ("lp", 2),
+                              ("shape", args.shape),
+                              ("variant", args.variant)))
         with use_policy(policy), mesh:
-            co = jax.jit(grad_fn, in_shardings=(param_sh, bsh),
-                         out_shardings=(None, param_sh)
-                         ).lower(params_abs, batch_abs).compile()
+            co = stages.wrap(
+                grad_fn, "diagnose.lm_grad", sig,
+                in_shardings=(param_sh, bsh),
+                out_shardings=(None, param_sh)
+            ).lower(params_abs, batch_abs).compile()
+        cost = co.cost_analysis()
+        if isinstance(cost, (list, tuple)):   # jax version drift, see probes
+            cost = cost[0] if cost else {}
         print(f"probe L=2 mb={mb} compiled; cost:",
-              {k: f"{v:.3e}" for k, v in co.cost_analysis().items()
+              {k: f"{v:.3e}" for k, v in cost.items()
                if k in ("flops", "bytes accessed")})
         analyze(co.as_text(), args.top)
     else:

@@ -73,6 +73,15 @@ def _batch_axes(mesh):
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
 
 
+def _probe_sig(arch, shape, mesh, variant, **extra) -> stages.Signature:
+    """Signature for one roofline probe: the probe layer count ``lp`` (and
+    any other closure knob) rides in ``extra`` so differently-unrolled
+    probes never alias one stage-cache entry."""
+    base = dict(arch=arch, shape=shape, variant=variant)
+    base.update(extra)
+    return stages.signature_of(mesh=mesh, extra=tuple(sorted(base.items())))
+
+
 def lm_corrected(arch: str, shape: str, mesh: Mesh,
                  variant: str = "baseline") -> Dict:
     from repro.models import transformer as tf
@@ -109,9 +118,12 @@ def lm_corrected(arch: str, shape: str, mesh: Mesh,
             grad_fn = jax.value_and_grad(
                 partial(tf.loss_fn, cfg=pcfg), has_aux=True)
             with use_policy(policy), mesh:
-                co = jax.jit(grad_fn, in_shardings=(param_sh, bsh),
-                             out_shardings=(None, param_sh)
-                             ).lower(params_abs, batch_abs).compile()
+                co = stages.wrap(
+                    grad_fn, "probes.lm_grad",
+                    _probe_sig(arch, shape, mesh, variant, lp=lp),
+                    in_shardings=(param_sh, bsh),
+                    out_shardings=(None, param_sh)
+                ).lower(params_abs, batch_abs).compile()
             probes[f"grad_L{lp}"] = extract(co)
         # optimizer at FULL parameter shapes (elementwise, no scan)
         params_abs = jax.eval_shape(lambda k: tf.init(k, cfg),
@@ -121,8 +133,9 @@ def lm_corrected(arch: str, shape: str, mesh: Mesh,
         opt_sh = dict(m=param_sh, v=param_sh,
                       count=NamedSharding(mesh, P()))
         with mesh:
-            co = jax.jit(
+            co = stages.wrap(
                 lambda g, s, p: adamw_update(g, s, p, AdamWConfig()),
+                "probes.lm_opt", _probe_sig(arch, shape, mesh, variant),
                 in_shardings=(param_sh, opt_sh, param_sh),
                 out_shardings=(param_sh, opt_sh, None)
             ).lower(params_abs, opt_abs, params_abs).compile()
@@ -143,8 +156,10 @@ def lm_corrected(arch: str, shape: str, mesh: Mesh,
             cache_sh = lm_cache_spec(pcfg, mesh,
                                      make_policy(mesh, pcfg.layout), S)
             with use_policy(policy), mesh:
-                co = jax.jit(
+                co = stages.wrap(
                     lambda p, t, c, l: tf.decode_step(p, t, c, l, pcfg),
+                    "probes.lm_decode",
+                    _probe_sig(arch, shape, mesh, variant, lp=lp),
                     in_shardings=(param_sh, NamedSharding(mesh, P(bax)),
                                   cache_sh, NamedSharding(mesh, P())),
                     out_shardings=(NamedSharding(mesh, P(bax)), cache_sh)
@@ -168,8 +183,10 @@ def lm_corrected(arch: str, shape: str, mesh: Mesh,
                                         jax.random.PRNGKey(0))
             policy, param_sh = _lm_shardings(pcfg, mesh, params_abs)
             with use_policy(policy), mesh:
-                co = jax.jit(
+                co = stages.wrap(
                     lambda p, t: tf.prefill(p, t, pcfg),
+                    "probes.lm_prefill",
+                    _probe_sig(arch, shape, mesh, variant, lp=lp),
                     in_shardings=(param_sh, NamedSharding(mesh, P(bax))),
                     out_shardings=None,
                 ).lower(params_abs, sds((mb, S), I32)).compile()

@@ -17,6 +17,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import stages
 from repro.configs import get_config, get_smoke_config
 
 
@@ -36,10 +37,15 @@ def run(args) -> dict:
     prompts = jnp.concatenate(
         [prompts, jnp.zeros((args.batch, 1), jnp.int32)], axis=1)
 
-    prefill = jax.jit(lambda p, t: tf.prefill(p, t, cfg, max_len=max_len))
-    decode = jax.jit(
+    sig = stages.signature_of(
+        extra=(("arch", args.arch), ("smoke", bool(args.smoke)),
+               ("max_len", int(max_len))))
+    prefill = stages.wrap(
+        lambda p, t: tf.prefill(p, t, cfg, max_len=max_len),
+        "serve.prefill", sig)
+    decode = stages.wrap(
         lambda p, t, c, l: tf.decode_step(p, t, c, l, cfg),
-        donate_argnums=(2,))
+        "serve.decode", sig, donate_argnums=(2,))
 
     t0 = time.time()
     logits, cache, cache_len = prefill(params, prompts)

@@ -35,6 +35,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro import stages
 from repro.checkpoint import AsyncCheckpointer, latest_step, restore
 from repro.configs import family, get_config, get_smoke_config
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
@@ -44,6 +45,16 @@ from repro.runtime.straggler import StragglerEvicted, StragglerMonitor
 
 class InjectedFailure(RuntimeError):
     pass
+
+
+def _step_sig(args, **extra) -> stages.Signature:
+    """Signature for a training-step program: every knob that changes the
+    traced step rides in ``extra`` (shapes ride in the abstract avals), so
+    equal-config call sites share one cache entry and different configs can
+    never alias each other's memoized closure."""
+    base = dict(arch=args.arch, smoke=bool(args.smoke), lr=float(args.lr))
+    base.update(extra)
+    return stages.signature_of(extra=tuple(sorted(base.items())))
 
 
 def _lm_setup(cfg, args):
@@ -59,8 +70,7 @@ def _lm_setup(cfg, args):
         grad_fn = jax.value_and_grad(partial(tf.loss_fn, cfg=cfg),
                                      has_aux=True)
 
-        @jax.jit
-        def step_fn(state, batch):
+        def step_body(state, batch):
             (loss, m), g = grad_fn(state["params"], batch)
             # error-feedback compression: what crosses the pod link
             g, err = roundtrip(g, state["err"], comp)
@@ -68,16 +78,18 @@ def _lm_setup(cfg, args):
                                        opt_cfg)
             return dict(params=p, opt=o, err=err), dict(m, gnorm=gnorm)
 
+        step_fn = stages.wrap(step_body, "train.lm_step",
+                              _step_sig(args, compress=args.compress))
         state0 = dict(params=params, opt=adamw_init(params),
                       err=ef_init(params))
     else:
         raw = tf.make_train_step(cfg, opt_cfg)
 
-        @jax.jit
-        def step_fn(state, batch):
+        def step_body(state, batch):
             p, o, m = raw(state["params"], state["opt"], batch)
             return dict(params=p, opt=o), m
 
+        step_fn = stages.wrap(step_body, "train.lm_step", _step_sig(args))
         state0 = dict(params=params, opt=adamw_init(params))
 
     def data(step):
@@ -106,11 +118,11 @@ def _gnn_setup(cfg, args):
             key, (g["node_feat"].shape[0], n_out))
     raw = gnn.make_train_step(cfg, AdamWConfig(lr=args.lr), task)
 
-    @jax.jit
-    def step_fn(state, batch):
+    def step_body(state, batch):
         p, o, m = raw(state["params"], state["opt"], batch)
         return dict(params=p, opt=o), m
 
+    step_fn = stages.wrap(step_body, "train.gnn_step", _step_sig(args))
     return (dict(params=params, opt=adamw_init(params)), step_fn,
             lambda step: g)
 
@@ -127,21 +139,23 @@ def _recsys_setup(cfg, args):
                                      cuts=(1024, 8192, 65536))
         rest = {k: v for k, v in params.items() if k != "table"}
 
-        @jax.jit
-        def step_fn(state, batch):
+        def step_body(state, batch):
             p, o, h, m = raw(state["params"], state["opt"], state["hier"],
                              batch)
             return dict(params=p, opt=o, hier=h), m
 
+        step_fn = stages.wrap(step_body, "train.recsys_step",
+                              _step_sig(args, hier_embed=True))
         state0 = dict(params=params, opt=adamw_init(rest), hier=hstate)
     else:
         raw = dcn.make_train_step(cfg, AdamWConfig(lr=args.lr))
 
-        @jax.jit
-        def step_fn(state, batch):
+        def step_body(state, batch):
             p, o, m = raw(state["params"], state["opt"], batch)
             return dict(params=p, opt=o), m
 
+        step_fn = stages.wrap(step_body, "train.recsys_step",
+                              _step_sig(args))
         state0 = dict(params=params, opt=adamw_init(params))
 
     def data(step):

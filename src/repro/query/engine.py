@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import stages
+from repro.analysis import contracts
 from repro.core import assoc
 from repro.core import semiring as sr_mod
 from repro.core.assoc import SENTINEL, AssocSegment
@@ -151,11 +152,18 @@ def point_lookup(h, rows, cols, sr: Semiring = sr_mod.PLUS_TIMES,
     rows = jnp.atleast_1d(jnp.asarray(rows, jnp.int32))
     cols = jnp.atleast_1d(jnp.asarray(cols, jnp.int32))
     rows, cols = jnp.broadcast_arrays(rows, cols)   # scalar row + vector col
+    if contracts.enabled() and not stages.is_tracing(h, rows, cols):
+        err, out = point_lookup_wrapped(contracts.debug_signature(sig))(
+            h, rows, cols)
+        contracts.throw(err)
+        return out
     return point_lookup_wrapped(sig)(h, rows, cols)
 
 
 def point_lookup_wrapped(sig: stages.Signature) -> stages.Wrapped:
-    """Keyed Q-vector point-query program for one config signature."""
+    """Keyed Q-vector point-query program for one config signature.  A
+    signature carrying ``contracts.DEBUG_EXTRA`` returns the checkified
+    sanitizer build (separate cache key, returns ``(err, out)``)."""
     sr = sr_mod.get(sig.sr)
     use_kernel, l0_mode = sig.use_kernel, sig.l0_mode or "auto"
 
@@ -169,7 +177,24 @@ def point_lookup_wrapped(sig: stages.Signature) -> stages.Wrapped:
             out = sr.add(out, _raw_point(raw, rows, cols, sr))
         return out
 
+    if contracts.sig_debug(sig):
+        return stages.wrap(_checked_query(run, sig, sr, "point_lookup"),
+                           "query.engine.point_lookup", sig)
     return stages.wrap(run, "query.engine.point_lookup", sig)
+
+
+def _checked_query(run, sig, sr, name):
+    """Checkified build of a query program: the per-layer binary searches
+    trade on canonical form (layer 0 only on the raw-buffer contract — the
+    engine never trusts its ordering), so the input hierarchy is checked
+    before serving and every in-dispatch canonicalization is deep-checked
+    via ``contracts.activate()``."""
+    def checked(h, *args):
+        contracts.check_hier(h, sr, l0_sorted=False,
+                             name=f"query.engine.{name} input")
+        with contracts.activate():
+            return run(h, *args)
+    return contracts.checkified(checked)
 
 
 def lookup(h, row, col, sr: Semiring = sr_mod.PLUS_TIMES,
@@ -224,6 +249,11 @@ def extract_rows(h, rows, num_cols: int, *,
         extra=(("num_cols", int(num_cols)),
                ("width", None if width is None else int(width))))
     rows = jnp.atleast_1d(jnp.asarray(rows, jnp.int32))
+    if contracts.enabled() and not stages.is_tracing(h, rows):
+        err, out = extract_rows_wrapped(contracts.debug_signature(sig))(
+            h, rows)
+        contracts.throw(err)
+        return out
     return extract_rows_wrapped(sig)(h, rows)
 
 
@@ -239,6 +269,9 @@ def extract_rows_wrapped(sig: stages.Signature) -> stages.Wrapped:
         return _extract_rows_body(h, rows, num_cols, sr, width, use_kernel,
                                   l0_mode)
 
+    if contracts.sig_debug(sig):
+        return stages.wrap(_checked_query(run, sig, sr, "extract_rows"),
+                           "query.engine.extract_rows", sig)
     return stages.wrap(run, "query.engine.extract_rows", sig)
 
 
@@ -298,6 +331,11 @@ def range_total(h, row_lo, row_hi, sr: Semiring = sr_mod.PLUS_TIMES,
     row_lo = jnp.atleast_1d(jnp.asarray(row_lo, jnp.int32))
     row_hi = jnp.atleast_1d(jnp.asarray(row_hi, jnp.int32))
     row_lo, row_hi = jnp.broadcast_arrays(row_lo, row_hi)
+    if contracts.enabled() and not stages.is_tracing(h, row_lo, row_hi):
+        err, out = range_total_wrapped(contracts.debug_signature(sig))(
+            h, row_lo, row_hi)
+        contracts.throw(err)
+        return out
     return range_total_wrapped(sig)(h, row_lo, row_hi)
 
 
@@ -309,6 +347,9 @@ def range_total_wrapped(sig: stages.Signature) -> stages.Wrapped:
     def run(h, row_lo, row_hi):
         return _range_total_body(h, row_lo, row_hi, sr, use_kernel, l0_mode)
 
+    if contracts.sig_debug(sig):
+        return stages.wrap(_checked_query(run, sig, sr, "range_total"),
+                           "query.engine.range_total", sig)
     return stages.wrap(run, "query.engine.range_total", sig)
 
 

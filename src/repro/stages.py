@@ -238,6 +238,25 @@ def _count(name: str, n: int = 1) -> None:
         _STATS[name] += n
 
 
+def _freeze(x):
+    """Hashable, deterministic stand-in for a jit-kwarg value.
+
+    ``in_shardings``/``out_shardings`` pytrees contain dicts (unhashable)
+    and sharding objects; the cache key needs a hashable mirror while the
+    ``Wrapped`` keeps the real values for ``jax.jit``.  Hashable leaves
+    pass through untouched so plain kwargs key exactly as before."""
+    if isinstance(x, dict):
+        return ("dict",) + tuple((k, _freeze(v))
+                                 for k, v in sorted(x.items(), key=repr))
+    if isinstance(x, (list, tuple)):
+        return ("seq",) + tuple(_freeze(v) for v in x)
+    try:
+        hash(x)
+    except TypeError:
+        return repr(x)
+    return x
+
+
 # ---------------------------------------------------------------- storage ---
 
 
@@ -396,10 +415,11 @@ class Wrapped:
         self.sig = sig
         self.static = tuple(static)
         self.jit_kwargs = tuple(jit_kwargs)
+        self._jk_key = _freeze(self.jit_kwargs)
 
     def _key(self, args):
         treedef, avals = _args_key(args)
-        return (self.entry, self.sig, self.static, self.jit_kwargs,
+        return (self.entry, self.sig, self.static, self._jk_key,
                 treedef, avals)
 
     def lower(self, *args) -> Lowered:
@@ -446,8 +466,8 @@ def wrap(fn: Callable, entry: str, sig: Optional[Signature] = None, *,
     sig = sig if sig is not None else Signature()
     if donate_argnums is not None:
         jit_kwargs["donate_argnums"] = tuple(donate_argnums)
-    jk = tuple(sorted(jit_kwargs.items()))
-    memo_key = (entry, sig, tuple(static), jk)
+    jk = tuple(sorted(jit_kwargs.items(), key=lambda kv: kv[0]))
+    memo_key = (entry, sig, tuple(static), _freeze(jk))
     with _LOCK:
         w = _WRAPPED.get(memo_key)
         if w is None:

@@ -1,0 +1,290 @@
+"""Runtime contract sanitizer (analysis/contracts.py): seeded corruption
+fires the matching check by name, clean state passes, REPRO_CHECK=1 keys
+a separate stages entry, and the knob is free when off (identical jaxprs,
+zero extra lowerings)."""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import stages
+from repro.analysis import contracts
+from repro.checkpoint import ckpt
+from repro.core import assoc, hier, semiring, vassoc
+
+SR = semiring.PLUS_TIMES
+
+
+def small_hier(seed=0, cuts=(16, 64), block=8, n=8):
+    h = hier.create(cuts, block_size=block)
+    k = jax.random.PRNGKey(seed)
+    rows = jax.random.randint(k, (n,), 0, 50).astype(jnp.int32)
+    cols = jax.random.randint(jax.random.fold_in(k, 1), (n,), 0,
+                              50).astype(jnp.int32)
+    return hier.update(h, rows, cols, jnp.ones((n,), jnp.float32))
+
+
+def with_layer0(h, **fields):
+    l0 = dataclasses.replace(h.layers[0], **fields)
+    return dataclasses.replace(h, layers=(l0,) + h.layers[1:])
+
+
+def dirty_tail(h):
+    # a stale value in a tail slot: exactly the PR 5 corruption class
+    return with_layer0(h, val=h.layers[0].val.at[-1].set(99.0))
+
+
+def make_seg(n=6, cap=16):
+    idx = jnp.arange(n, dtype=jnp.int32)
+    seg, _ = assoc.from_coo(idx, idx, jnp.ones((n,), jnp.float32), cap, SR)
+    return seg
+
+
+# ------------------------------------------------- seeded corruption fires --
+
+
+def test_clean_hier_passes():
+    contracts.validate_hier(small_hier(), SR)
+
+
+def test_dirty_tail_fires():
+    with pytest.raises(ValueError, match="sentinel-tail violation"):
+        contracts.validate_hier(dirty_tail(small_hier()), SR)
+
+
+def test_unsorted_prefix_fires():
+    seg = make_seg()
+    hi = seg.hi.at[0].set(seg.hi[1]).at[1].set(seg.hi[0])
+    lo = seg.lo.at[0].set(seg.lo[1]).at[1].set(seg.lo[0])
+    bad = dataclasses.replace(seg, hi=hi, lo=lo)
+    with pytest.raises(ValueError, match="canonical-form violation"):
+        contracts.validate_segment(bad, SR, sorted=True)
+    # the raw-buffer contract makes no ordering claim: same buffer passes
+    contracts.validate_segment(bad, SR, sorted=False)
+
+
+def test_sentinel_in_prefix_fires():
+    seg = make_seg()
+    bad = dataclasses.replace(
+        seg, hi=seg.hi.at[0].set(assoc.SENTINEL),
+        lo=seg.lo.at[0].set(assoc.SENTINEL))
+    with pytest.raises(ValueError, match="canonical-form violation"):
+        contracts.validate_segment(bad, SR, sorted=True)
+
+
+def test_nnz_bound_fires():
+    seg = make_seg(cap=16)
+    bad = dataclasses.replace(seg, nnz=jnp.int32(17))
+    with pytest.raises(ValueError, match="nnz bound violation"):
+        contracts.validate_segment(bad, SR, sorted=False)
+
+
+def test_counter_carry_fires():
+    bad = dataclasses.replace(small_hier(), n_updates_hi=jnp.int32(-1))
+    with pytest.raises(ValueError, match="counter carry violation"):
+        contracts.validate_hier(bad, SR)
+
+
+def test_counter_consistency_fires():
+    bad = dataclasses.replace(small_hier(), n_updates=jnp.uint32(0),
+                              n_updates_hi=jnp.int32(0))
+    with pytest.raises(ValueError, match="counter consistency violation"):
+        contracts.validate_hier(bad, SR)
+
+
+def test_counter_dtype_is_a_hard_error():
+    bad = dataclasses.replace(small_hier(),
+                              n_updates_hi=jnp.zeros((), jnp.float32))
+    with pytest.raises(TypeError, match="counter word dtype violation"):
+        contracts.validate_hier(bad, SR)
+
+
+def test_plan_bound_fires():
+    err, _ = contracts.checkified(
+        lambda d: contracts.check_plan(d, (16, 64)))(
+            jnp.array([0, 2], jnp.int32))
+    with pytest.raises(ValueError, match="spill-plan bound violation"):
+        contracts.throw(err)
+
+
+# ----------------------------------------------------- sanitized entries --
+
+
+def test_update_front_door_fires_on_corrupt_input(monkeypatch):
+    bad = dirty_tail(small_hier())
+    monkeypatch.setenv("REPRO_CHECK", "1")
+    idx = jnp.arange(8, dtype=jnp.int32)
+    with pytest.raises(ValueError,
+                       match="sentinel-tail violation in hier.update input"):
+        hier.update(bad, idx, idx, jnp.ones((8,), jnp.float32))
+
+
+def test_checked_update_matches_unchecked(monkeypatch):
+    monkeypatch.delenv("REPRO_CHECK", raising=False)
+    h0 = hier.create((16, 64), block_size=8)
+    idx = jnp.arange(8, dtype=jnp.int32)
+    vals = jnp.ones((8,), jnp.float32)
+    off = hier.update(h0, idx, idx, vals)
+    monkeypatch.setenv("REPRO_CHECK", "1")
+    on = hier.update(h0, idx, idx, vals)
+    for a, b in zip(jax.tree.leaves(off), jax.tree.leaves(on)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_flush_and_query_run_under_check(monkeypatch):
+    monkeypatch.setenv("REPRO_CHECK", "1")
+    h = small_hier(seed=3)
+    h = hier.flush(h)
+    contracts.validate_hier(h, SR)
+
+
+# ----------------------------------------------------- staged zero cost --
+
+
+def test_debug_keys_separate_stage_entry(monkeypatch):
+    monkeypatch.delenv("REPRO_CHECK", raising=False)
+    # unique config so no other test shares the cache entry
+    h = hier.create((32, 128), block_size=16)
+    idx = jnp.arange(16, dtype=jnp.int32)
+    vals = jnp.ones((16,), jnp.float32)
+
+    h1 = hier.update(h, idx, idx, vals)
+    s1 = stages.stats()
+    h2 = hier.update(h1, idx, idx, vals)
+    s2 = stages.stats()
+    assert s2["lowerings"] == s1["lowerings"], \
+        "repeat production call must be a cache hit"
+
+    monkeypatch.setenv("REPRO_CHECK", "1")
+    hier.update(h2, idx, idx, vals)
+    s3 = stages.stats()
+    assert s3["lowerings"] == s2["lowerings"] + 1, \
+        "debug twin keys exactly one separate entry"
+    hier.update(h2, idx, idx, vals)
+    s4 = stages.stats()
+    assert s4["lowerings"] == s3["lowerings"]
+
+    monkeypatch.delenv("REPRO_CHECK")
+    hier.update(h2, idx, idx, vals)
+    s5 = stages.stats()
+    assert s5["lowerings"] == s4["lowerings"], \
+        "production key untouched by the sanitizer"
+
+
+def test_jaxpr_identical_with_knob_off(monkeypatch):
+    monkeypatch.delenv("REPRO_CHECK", raising=False)
+    h = hier.create((8, 32), block_size=4)
+    idx = jnp.arange(4, dtype=jnp.int32)
+    vals = jnp.ones((4,), jnp.float32)
+
+    def jaxpr():
+        return str(jax.make_jaxpr(
+            lambda hh, r, c, v: hier.update(hh, r, c, v))(h, idx, idx, vals))
+
+    before = jaxpr()
+    monkeypatch.setenv("REPRO_CHECK", "1")
+    hier.update(h, idx, idx, vals)          # compile + run the debug twin
+    monkeypatch.delenv("REPRO_CHECK")
+    after = jaxpr()
+    assert before == after, \
+        "sanitizer use must not perturb the production program"
+
+
+def test_debug_signature_idempotent():
+    sig = stages.signature_of(cuts=(8, 32), block_size=4)
+    d1 = contracts.debug_signature(sig)
+    assert contracts.sig_debug(d1) and not contracts.sig_debug(sig)
+    assert contracts.debug_signature(d1) == d1
+
+
+# -------------------------------------------------------- ckpt.restore --
+
+
+def _corrupt_saved_leaf(step_dir, suffix, value):
+    with open(step_dir / "manifest.json") as f:
+        man = json.load(f)
+    leaf = next(l for l in man["leaves"] if l["path"].endswith(suffix))
+    p = step_dir / leaf["file"]
+    a = np.load(p)
+    a[-1] = value
+    np.save(p, a)
+
+
+def test_restore_clean_passes_under_check(tmp_path, monkeypatch):
+    h = small_hier()
+    ckpt.save(str(tmp_path), 1, h)
+    monkeypatch.setenv("REPRO_CHECK", "1")
+    out = ckpt.restore(str(tmp_path), 1, h)
+    np.testing.assert_array_equal(np.asarray(out.layers[0].val),
+                                  np.asarray(h.layers[0].val))
+
+
+def test_restore_corrupt_checkpoint_names_invariant(tmp_path, monkeypatch):
+    h = small_hier()
+    ckpt.save(str(tmp_path), 1, h)
+    _corrupt_saved_leaf(tmp_path / "step_1", "val", 123.0)
+    monkeypatch.setenv("REPRO_CHECK", "1")
+    with pytest.raises(ValueError, match="sentinel-tail violation"):
+        ckpt.restore(str(tmp_path), 1, h)
+    # knob off: the corrupt restore is NOT validated (zero-cost default)
+    monkeypatch.delenv("REPRO_CHECK")
+    ckpt.restore(str(tmp_path), 1, h)
+
+
+def test_restore_unsorted_layer_names_invariant(tmp_path, monkeypatch):
+    # deeper layers must be canonical even on the raw-restore path:
+    # validate eagerly with the segment checker to name the violation
+    h = hier.flush(small_hier())          # layer 0 empty, layer 1 canonical
+    ckpt.save(str(tmp_path), 2, h)
+    monkeypatch.setenv("REPRO_CHECK", "1")
+    restored = ckpt.restore(str(tmp_path), 2, h)
+    l1 = restored.layers[1]
+    swapped = dataclasses.replace(
+        l1, hi=l1.hi.at[0].set(l1.hi[1]).at[1].set(l1.hi[0]),
+        lo=l1.lo.at[0].set(l1.lo[1]).at[1].set(l1.lo[0]))
+    with pytest.raises(ValueError, match="canonical-form violation"):
+        contracts.validate_segment(swapped, SR, sorted=True)
+
+
+def test_restore_migrated_leaf_validated(tmp_path, monkeypatch):
+    h = small_hier()
+    ckpt.save(str(tmp_path), 3, h)
+    mpath = tmp_path / "step_3" / "manifest.json"
+    man = json.loads(mpath.read_text())
+    man["leaves"] = [l for l in man["leaves"]
+                     if not l["path"].endswith("n_updates_hi")]
+    mpath.write_text(json.dumps(man))
+    monkeypatch.setenv("REPRO_CHECK", "1")
+    with pytest.warns(UserWarning, match="migrating old checkpoint"):
+        ckpt.restore(str(tmp_path), 3, h)           # clean template: ok
+    bad_tmpl = dataclasses.replace(h, n_updates_hi=jnp.int32(-1))
+    with pytest.warns(UserWarning, match="migrating old checkpoint"):
+        with pytest.raises(ValueError, match="counter carry violation"):
+            ckpt.restore(str(tmp_path), 3, bad_tmpl)
+
+
+# --------------------------------------- the latent violation (vassoc) --
+
+
+def test_scatter_apply_raw_buffer_gate():
+    """Regression: scatter_apply trusted the sentinel tail, which the
+    raw-buffer contract does not promise — a dirty slot beyond nnz (e.g.
+    from a restored checkpoint of unknown provenance) was applied to the
+    table.  ``sorted=False`` must gate on nnz."""
+    cap, dim = 8, 4
+    seg = vassoc.empty(cap, dim)
+    key = seg.key.at[0].set(3).at[1].set(5).at[2].set(7)
+    val = seg.val.at[0].set(1.0).at[1].set(2.0).at[2].set(9.0)
+    seg = dataclasses.replace(seg, key=key, val=val, nnz=jnp.int32(2))
+    table = jnp.zeros((10, dim), jnp.float32)
+
+    raw = vassoc.scatter_apply(table, seg, sorted=False)
+    assert float(raw[7].sum()) == 0.0, "dirty slot beyond nnz must be dead"
+    assert float(raw[3, 0]) == 1.0 and float(raw[5, 0]) == 2.0
+
+    trusted = vassoc.scatter_apply(table, seg)      # canonical contract
+    assert float(trusted[7, 0]) == 9.0, \
+        "sorted=True documents the old (trusting) behavior"

@@ -211,7 +211,10 @@ def test_searchsorted_full_run_no_overshoot():
         val=jnp.full((8,), 2.5, jnp.float32),
         nnz=jnp.int32(8))
     assert full.nnz == full.capacity
-    h = dataclasses.replace(h, layers=(full,) + h.layers[1:])
+    # keep the counter contract honest for the hand-built state (the
+    # REPRO_CHECK sanitizer rejects live slots with no recorded updates)
+    h = dataclasses.replace(h, layers=(full,) + h.layers[1:],
+                            n_updates=jnp.uint32(8))
     for mode in ("scan", "canon"):
         dense, trunc = engine.extract_rows(h, jnp.array([3]), 8,
                                            l0_mode=mode)

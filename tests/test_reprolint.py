@@ -1,0 +1,327 @@
+"""reprolint self-tests: every rule fires on its bad fixture and stays
+quiet on the good twin, suppression/baseline mechanics behave, and the
+repo itself stays lint-clean against the committed baseline."""
+import os
+import subprocess
+import sys
+import textwrap
+
+from repro.analysis import lint
+
+
+def violations(src, rule=None, path="repro/fake/mod.py", **kw):
+    out = lint.lint_source(textwrap.dedent(src), path, **kw)
+    if rule is not None:
+        out = [v for v in out if v.rule == rule]
+    return out
+
+
+# ------------------------------------------------------------------- R001 --
+
+
+def test_r001_bare_jit_fires():
+    vs = violations("""
+        import jax
+        step = jax.jit(lambda x: x + 1)
+        """, "R001")
+    assert len(vs) == 1 and "stages.wrap" in vs[0].message
+
+
+def test_r001_from_import_alias_fires():
+    vs = violations("""
+        from jax import jit
+        f = jit(lambda x: x)
+        """, "R001")
+    assert len(vs) == 1
+
+
+def test_r001_decorator_and_partial_fire():
+    vs = violations("""
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, static_argnames=("k",))
+        def f(x, k):
+            return x
+        """, "R001")
+    assert len(vs) == 1
+
+
+def test_r001_good_twin_quiet():
+    assert violations("""
+        from repro import stages
+        step = stages.wrap(lambda x: x + 1, "entry", None)
+        """, "R001") == []
+
+
+def test_r001_stages_py_exempt():
+    assert violations("""
+        import jax
+        f = jax.jit(lambda x: x)
+        """, "R001", path="repro/stages.py") == []
+
+
+# ------------------------------------------------------------------- R002 --
+
+_R002_BAD = """
+    import jax
+    from jax import lax
+
+    def pick(pred, x):
+        return lax.cond(pred, lambda v: v, lambda v: -v, x)
+
+    run = jax.vmap(pick)
+    """
+
+
+def test_r002_vmapped_cond_fires():
+    vs = violations(_R002_BAD, "R002")
+    assert len(vs) == 1 and "batch_mode" in vs[0].message
+
+
+def test_r002_batch_mode_gate_quiet():
+    assert violations("""
+        import jax
+        from jax import lax
+
+        def pick(pred, x, batch_mode="switch"):
+            if batch_mode == "branchfree":
+                return x
+            return lax.cond(pred, lambda v: v, lambda v: -v, x)
+
+        run = jax.vmap(pick)
+        """, "R002") == []
+
+
+def test_r002_no_vmap_module_quiet():
+    assert violations("""
+        from jax import lax
+
+        def pick(pred, x):
+            return lax.cond(pred, lambda v: v, lambda v: -v, x)
+        """, "R002") == []
+
+
+# ------------------------------------------------------------------- R003 --
+
+
+def test_r003_use_after_donation_fires():
+    vs = violations("""
+        from repro import stages
+        step = stages.wrap(body, "entry", sig, donate_argnums=(0,))
+
+        def drive(state, batch):
+            out = step(state, batch)
+            return out, state
+        """, "R003")
+    assert len(vs) == 1 and "'state'" in vs[0].message
+
+
+def test_r003_rebound_quiet():
+    assert violations("""
+        from repro import stages
+        step = stages.wrap(body, "entry", sig, donate_argnums=(0,))
+
+        def drive(state, batch):
+            state = step(state, batch)
+            return state
+        """, "R003") == []
+
+
+# ------------------------------------------------------------------- R004 --
+
+
+def test_r004_item_in_traced_fires():
+    vs = violations("""
+        from repro import stages
+
+        def body(x):
+            return x * x.item()
+
+        out = stages.wrap(body, "entry", None)
+        """, "R004")
+    assert len(vs) == 1 and ".item()" in vs[0].message
+
+
+def test_r004_int_on_traced_fires():
+    vs = violations("""
+        from repro import stages
+
+        def body(x):
+            return int(x)
+
+        out = stages.wrap(body, "entry", None)
+        """, "R004")
+    assert len(vs) == 1
+
+
+def test_r004_static_metadata_exempt():
+    assert violations("""
+        from repro import stages
+
+        def body(x):
+            return x.reshape(int(x.shape[0]), -1)
+
+        out = stages.wrap(body, "entry", None)
+        """, "R004") == []
+
+
+def test_r004_host_code_quiet():
+    assert violations("""
+        def host(x):
+            return x.item()
+        """, "R004") == []
+
+
+# ------------------------------------------------------------------- R005 --
+
+
+def test_r005_raw_reduction_fires():
+    vs = violations("""
+        import jax.numpy as jnp
+
+        def total(seg):
+            return jnp.sum(seg.val)
+        """, "R005")
+    assert len(vs) == 1 and "raw-buffer" in vs[0].message
+
+
+def test_r005_transitive_taint_fires():
+    vs = violations("""
+        import jax.numpy as jnp
+
+        def total(seg):
+            x = seg.val * 2
+            y = x + 1
+            return jnp.sum(y)
+        """, "R005")
+    assert len(vs) == 1
+
+
+def test_r005_sorted_param_quiet():
+    assert violations("""
+        import jax.numpy as jnp
+
+        def total(seg, sorted=True):
+            return jnp.sum(seg.val)
+        """, "R005") == []
+
+
+def test_r005_nnz_gate_quiet():
+    assert violations("""
+        import jax.numpy as jnp
+
+        def total(seg):
+            live = jnp.arange(seg.val.shape[0]) < seg.nnz
+            return jnp.sum(jnp.where(live, seg.val, 0))
+        """, "R005") == []
+
+
+# ------------------------------------------------------------ suppression --
+
+_BAD_JIT = "import jax\nstep = jax.jit(lambda x: x)"
+
+
+def test_allow_on_line_suppresses():
+    src = ("import jax\n"
+           "step = jax.jit(lambda x: x)  # reprolint: allow(R001) legacy\n")
+    assert violations(src, "R001") == []
+    assert len(violations(src, "R001", with_suppressed=True)) == 1
+
+
+def test_allow_on_line_above_suppresses():
+    src = ("import jax\n"
+           "# reprolint: allow(R001) wrapped statement\n"
+           "step = jax.jit(lambda x: x)\n")
+    assert violations(src, "R001") == []
+
+
+def test_allow_two_lines_above_does_not_suppress():
+    src = ("import jax\n"
+           "# reprolint: allow(R001) too far away\n"
+           "#\n"
+           "step = jax.jit(lambda x: x)\n")
+    assert len(violations(src, "R001")) == 1
+
+
+def test_allow_without_reason_does_not_suppress():
+    src = ("import jax\n"
+           "step = jax.jit(lambda x: x)  # reprolint: allow(R001)\n")
+    assert len(violations(src, "R001")) == 1
+
+
+def test_allow_wrong_rule_does_not_suppress():
+    src = ("import jax\n"
+           "step = jax.jit(lambda x: x)  # reprolint: allow(R002) nope\n")
+    assert len(violations(src, "R001")) == 1
+
+
+# --------------------------------------------------------------- baseline --
+
+
+def test_baseline_roundtrip(tmp_path):
+    vs = violations(_BAD_JIT)
+    path = str(tmp_path / "base.txt")
+    lint.write_baseline(path, vs)
+    base = lint.load_baseline(path)
+    assert lint.new_violations(vs, base) == []
+    extra = violations("import jax\n\ndef f(x):\n    return jax.jit(x)\n")
+    fresh = lint.new_violations(vs + extra, base)
+    assert fresh == extra
+
+
+def test_baseline_is_line_free():
+    a = violations("import jax\nstep = jax.jit(lambda x: x)")
+    b = violations("import jax\n\n\nstep = jax.jit(lambda x: x)")
+    assert [v.key for v in a] == [v.key for v in b]
+
+
+# -------------------------------------------------------------------- CLI --
+
+
+def test_cli_exit_codes_and_counts(tmp_path, capsys):
+    f = tmp_path / "mod.py"
+    f.write_text("import jax\nstep = jax.jit(lambda x: x)\n")
+    base = str(tmp_path / "base.txt")
+    assert lint.main([str(f), "--baseline", base, "-q"]) == 1
+    assert lint.main([str(f), "--baseline", base, "--write-baseline"]) == 0
+    assert lint.main([str(f), "--baseline", base]) == 0
+    out = capsys.readouterr().out
+    assert "reprolint per-rule counts" in out
+
+
+def test_cli_syntax_error_reported(tmp_path):
+    f = tmp_path / "broken.py"
+    f.write_text("def f(:\n")
+    assert lint.main([str(f), "--no-baseline", "-q"]) == 1
+
+
+# -------------------------------------------------------------- the repo --
+
+
+def test_repo_is_lint_clean():
+    """src/repro stays clean against the committed baseline — a new
+    violation fails tier-1, not just the CI lint job."""
+    pkg = os.path.dirname(os.path.dirname(os.path.abspath(lint.__file__)))
+    vs = lint.lint_paths([pkg])
+    base = lint.load_baseline(lint.DEFAULT_BASELINE)
+    fresh = lint.new_violations(vs, base)
+    assert fresh == [], "\n".join(v.render() for v in fresh)
+
+
+def test_lint_importable_without_jax():
+    """CI lints before (or without) the accelerator stack: importing and
+    running the linter must not touch jax."""
+    src_dir = os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(lint.__file__))))
+    code = ("import sys\n"
+            "sys.modules['jax'] = None\n"
+            "from repro.analysis import lint\n"
+            "vs = lint.lint_source('import jax\\nf = jax.jit(lambda x: x)')\n"
+            "assert [v.rule for v in vs] == ['R001'], vs\n"
+            "print('ok')\n")
+    env = dict(os.environ, PYTHONPATH=src_dir)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True)
+    assert out.returncode == 0, out.stderr
+    assert "ok" in out.stdout
