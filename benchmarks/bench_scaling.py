@@ -78,6 +78,10 @@ def main(report: Report | None = None, mode: str = "both",
             rows, cols, vals = instance_streams(key, n_inst, blocks, block,
                                                 scale=scale)
             sec = timeit(run, states, rows, cols, vals, warmup=1, iters=3)
+            # cost columns off exactly the executable just timed (the
+            # same numbers tracekit pins as budgets): arithmetic
+            # intensity rides the trajectory alongside upd/s
+            cost = stages.cost_of(run, states, rows, cols, vals)
             rate = n_inst * blocks * block / sec
             rates[n_inst] = rate
             if base_per_instance is None:
@@ -88,9 +92,14 @@ def main(report: Report | None = None, mode: str = "both",
             # superlinear).  Cross-device linearity is structural: the
             # compiled 512-chip ingest has zero update-path collectives.
             overhead = base_per_instance / rate
+            ai = ""
+            if cost.get("flops") and cost.get("bytes_accessed"):
+                ai = (f"; AI {cost['flops'] / cost['bytes_accessed']:.3f}"
+                      " flop/B")
             report.add(f"scaling_{name}_{n_inst}_instances", sec / blocks,
-                       f"{rate:,.0f} upd/s agg; overhead x{overhead:.2f}",
-                       compile_seconds=sec.compile_s)
+                       f"{rate:,.0f} upd/s agg; overhead x{overhead:.2f}"
+                       f"{ai}",
+                       compile_seconds=sec.compile_s, cost=cost)
         # projection: paper scale = 34,000 instances across 1,100 nodes.
         # On this 1-core container instances serialize, so the honest
         # projection uses per-instance rate x instance count (the dry-run

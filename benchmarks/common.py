@@ -50,27 +50,41 @@ def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> Timing:
 
 
 class Report:
-    """Collects (name, us_per_call, compile_us, derived) rows; prints CSV."""
+    """Collects (name, us_per_call, compile_us, flops, bytes_accessed,
+    derived) rows; prints CSV."""
 
     def __init__(self):
         self.rows = []
 
     def add(self, name: str, seconds: float, derived: str = "",
-            compile_seconds: float | None = None):
+            compile_seconds: float | None = None,
+            cost: dict | None = None):
         """``seconds`` is the steady-state (run) time.  ``compile_seconds``
         defaults to the ``.compile_s`` a ``timeit`` Timing carries, so
         passing the timeit result through unscaled records both columns;
         derived/scaled rows pass ``compile_seconds=sec.compile_s``
-        explicitly (float arithmetic drops the attribute)."""
+        explicitly (float arithmetic drops the attribute).
+
+        ``cost`` is the audited executable's cost columns — the dict
+        ``repro.stages.cost_of`` returns (``flops``/``bytes_accessed``) —
+        so the trajectory carries arithmetic intensity, not just upd/s
+        (ISSUE 8: the same numbers tracekit pins as budgets)."""
         if compile_seconds is None:
             compile_seconds = getattr(seconds, "compile_s", None)
         cus = None if compile_seconds is None else compile_seconds * 1e6
-        self.rows.append((name, seconds * 1e6, cus, derived))
+        cost = cost or {}
+        flops, bytes_acc = cost.get("flops"), cost.get("bytes_accessed")
+        self.rows.append((name, seconds * 1e6, cus, flops, bytes_acc,
+                          derived))
         ctxt = "" if cus is None else f"{cus:.1f}"
-        print(f"{name},{seconds * 1e6:.1f},{ctxt},{derived}", flush=True)
+        ftxt = "" if flops is None else f"{flops:.6g}"
+        btxt = "" if bytes_acc is None else f"{bytes_acc:.6g}"
+        print(f"{name},{seconds * 1e6:.1f},{ctxt},{ftxt},{btxt},{derived}",
+              flush=True)
 
     def header(self):
-        print("name,us_per_call,compile_us,derived", flush=True)
+        print("name,us_per_call,compile_us,flops,bytes_accessed,derived",
+              flush=True)
 
 
 def persist(tag: str, report: Report, derived: dict | None = None,
@@ -93,8 +107,9 @@ def persist(tag: str, report: Report, derived: dict | None = None,
         backend=jax.default_backend(),
         device_count=jax.device_count(),
         config=_jsonable(config or {}),
-        rows=[dict(name=n, us_per_call=us, compile_us=cus, derived=d)
-              for n, us, cus, d in report.rows],
+        rows=[dict(name=n, us_per_call=us, compile_us=cus, flops=fl,
+                   bytes_accessed=ba, derived=d)
+              for n, us, cus, fl, ba, d in report.rows],
         derived=_jsonable(derived or {}),
     )
     path = os.path.join(out_dir, f"BENCH_{tag}.json")

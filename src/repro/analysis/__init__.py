@@ -17,7 +17,17 @@ down and enforces them twice:
   default and staged out to literally zero cost: the instrumented
   programs key separate ``stages`` cache entries, so production keys
   never see a check.
+- ``repro.analysis.tracekit`` (ISSUE 8): the post-lowering layer — rules
+  J001-J006 walked over the jaxpr/HLO artifacts ``repro.stages`` caches
+  for every fleet entry (x64 leaks, baked constants, unhonored donation,
+  host callbacks, int64 widening, retrace sprawl), plus per-entry
+  ``cost_analysis()`` FLOPs/bytes pinned as committed budgets in
+  ``COST_BUDGETS.json``.  Run as
+  ``python -m repro.analysis.tracekit --check``.
+- ``repro.analysis.baseline``: the shared accepted-debt machinery (allow
+  comments + committed baseline files) both analyzers build on, factored
+  out of ``lint`` so the two cannot drift.
 
-Do NOT import ``contracts`` here: ``lint`` must stay importable without
-jax installed/initialized.
+Do NOT import ``contracts`` or ``tracekit`` here: ``lint`` (and
+``baseline``) must stay importable without jax installed/initialized.
 """

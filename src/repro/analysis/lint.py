@@ -51,8 +51,11 @@ import re
 import sys
 from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
+from repro.analysis import baseline as _baseline
+
 RULES = {
-    "R001": "bare jax.jit outside stages.py (route through stages.wrap)",
+    "R001": "bare jax.jit/pmap/pjit outside stages.py (route through "
+            "stages.wrap)",
     "R002": "vmap-reachable lax.switch/cond without a batch_mode gate",
     "R003": "donated argument referenced after the donating call",
     "R004": "host-side escape inside traced code",
@@ -202,28 +205,40 @@ class _File:
 # -------------------------------------------------------------------- rules --
 
 
+# Every jit-spelling the front-door contract covers: plain jit, pmap
+# (pmap IS a jit — it compiles and caches per call site exactly the same
+# way), and pjit.  Nested-transform compositions (jax.vmap(jax.jit(...)))
+# are covered structurally: the inner jit attribute/alias is still an AST
+# node of its own, so it matches regardless of what wraps it.
+_R001_JITS = {"jit", "pmap", "pjit"}
+_R001_MODULES = {"jax", "jax.experimental.pjit"}
+
+
 def _r001(f: _File) -> Iterable[Violation]:
     if os.path.basename(f.path) == "stages.py":
         return
-    jit_aliases = set()
+    jit_aliases: Dict[str, str] = {}
     for node in ast.walk(f.tree):
-        if isinstance(node, ast.ImportFrom) and node.module == "jax":
+        if isinstance(node, ast.ImportFrom) and node.module in _R001_MODULES:
             for alias in node.names:
-                if alias.name == "jit":
-                    jit_aliases.add(alias.asname or alias.name)
+                if alias.name in _R001_JITS:
+                    jit_aliases[alias.asname or alias.name] = alias.name
     for node in ast.walk(f.tree):
-        hit = False
-        if isinstance(node, ast.Attribute) and node.attr == "jit" \
-                and isinstance(node.value, ast.Name) \
-                and node.value.id == "jax":
-            hit = True
+        name = None
+        if isinstance(node, ast.Attribute) and node.attr in _R001_JITS \
+                and (isinstance(node.value, ast.Name)
+                     and node.value.id == "jax"
+                     or _is_dotted(node.value, "jax", "experimental",
+                                   "pjit")):
+            name = f"jax.{node.attr}" if isinstance(node.value, ast.Name) \
+                else f"pjit.{node.attr}"
         elif isinstance(node, ast.Name) and node.id in jit_aliases \
                 and isinstance(node.ctx, ast.Load):
-            hit = True
-        if hit:
+            name = jit_aliases[node.id]
+        if name is not None:
             yield Violation(
                 "R001", f.norm, node.lineno, f.scope_name(node),
-                "bare jax.jit: production dispatch routes through "
+                f"bare {name}: production dispatch routes through "
                 "repro.stages.wrap (keyed AOT cache, PR 6 contract)")
 
 
@@ -558,46 +573,28 @@ def lint_paths(paths: Sequence[str]) -> List[Violation]:
     return out
 
 
-def load_baseline(path: str) -> collections.Counter:
-    base: collections.Counter = collections.Counter()
-    if not os.path.exists(path):
-        return base
-    with open(path, "r", encoding="utf-8") as fh:
-        for line in fh:
-            line = line.strip()
-            if line and not line.startswith("#"):
-                base[line] += 1
-    return base
+# Baseline mechanics are shared with tracekit (repro.analysis.baseline);
+# these names stay exported because tests/CI call them off `lint`.
+load_baseline = _baseline.load_baseline
+
+_BASELINE_HEADER = (
+    "# reprolint baseline — accepted pre-existing debt, one\n"
+    "# 'RULE path scope' entry per violation.  Regenerate with\n"
+    "#   python -m repro.analysis.lint src/ --write-baseline\n"
+    "# New violations (keys not in this file) fail the lint.\n")
 
 
 def write_baseline(path: str, violations: Sequence[Violation]) -> None:
-    with open(path, "w", encoding="utf-8") as fh:
-        fh.write("# reprolint baseline — accepted pre-existing debt, one\n"
-                 "# 'RULE path scope' entry per violation.  Regenerate with\n"
-                 "#   python -m repro.analysis.lint src/ --write-baseline\n"
-                 "# New violations (keys not in this file) fail the lint.\n")
-        for v in sorted(violations, key=lambda v: v.key):
-            fh.write(v.key + "\n")
+    _baseline.write_baseline(path, violations, _BASELINE_HEADER)
 
 
 def new_violations(violations: Sequence[Violation],
                    baseline: collections.Counter) -> List[Violation]:
-    remaining = collections.Counter(baseline)
-    out = []
-    for v in violations:
-        if remaining[v.key] > 0:
-            remaining[v.key] -= 1
-        else:
-            out.append(v)
-    return out
+    return _baseline.new_violations(violations, baseline)
 
 
 def per_rule_counts(violations: Sequence[Violation]) -> Dict[str, int]:
-    counts = {rule: 0 for rule in RULES}
-    for v in violations:
-        counts.setdefault(v.rule, 0)
-        counts[v.rule] += 1
-    return counts
+    return _baseline.per_rule_counts(violations, RULES)
 
 
 def main(argv: Optional[Sequence[str]] = None) -> int:

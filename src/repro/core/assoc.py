@@ -18,9 +18,11 @@ paper's share-nothing multi-instance design.
 CONTRACTS
 ---------
 The invariants every producer and consumer of a segment trades on.  They
-are enforced mechanically: statically by ``repro.analysis.lint`` (rules
-R001-R005) and at trace time by ``repro.analysis.contracts`` under
-``REPRO_CHECK=1``; EXPERIMENTS.md cross-references this section.
+are enforced mechanically three ways: statically by
+``repro.analysis.lint`` (rules R001-R005), at trace time by
+``repro.analysis.contracts`` under ``REPRO_CHECK=1``, and post-lowering
+by ``repro.analysis.tracekit`` (rules J001-J006 over the staged
+jaxpr/HLO); EXPERIMENTS.md cross-references this section.
 
 1. **Canonical form** (``sorted=True`` paths, every layer >= 1, and layer 0
    outside lazy-append mode): entries [0, nnz) are sorted-unique by
@@ -43,6 +45,12 @@ R001-R005) and at trace time by ``repro.analysis.contracts`` under
    (hi, lo) = (int32, uint32) carry pair — lo wraps mod 2**32, hi counts
    wraps and is never negative; total live slots never exceed the 64-bit
    update total.
+6. **32-bit discipline** (tracekit J001/J005): keys, counters and values
+   stay <= 32 bits inside every compiled kernel.  Compares over (hi, lo)
+   pairs are LEXICOGRAPHIC pair-compares — never a pack into an int64
+   (J005 flags the widening), and no traced computation may touch
+   f64/c128 (J001 flags x64 leaks).  This is what keeps the bytes each
+   merge moves on the paper's roofline (arXiv:1902.00846 §IV).
 """
 from __future__ import annotations
 

@@ -70,13 +70,28 @@ def analyze(hlo: str, top: int = 20):
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", required=True)
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
     ap.add_argument("--mesh", default="single", choices=["single", "multi"])
     ap.add_argument("--variant", default="baseline")
     ap.add_argument("--probe", action="store_true")
     ap.add_argument("--top", type=int, default=20)
+    ap.add_argument("--audit", action="store_true",
+                    help="tracekit fleet audit instead of a single-program "
+                    "diagnosis: J001-J006 + cost budgets over the whole "
+                    "stages dispatch set (ISSUE 8); no --arch needed")
+    ap.add_argument("--audit-config", default="smoke",
+                    choices=("smoke", "production"),
+                    help="fleet config for --audit (entry set is identical, "
+                    "only shapes differ)")
     args = ap.parse_args()
+
+    if args.audit:
+        from repro.analysis import tracekit
+        raise SystemExit(tracekit.main(["--check",
+                                        "--config", args.audit_config]))
+    if not args.arch or not args.shape:
+        ap.error("--arch and --shape are required unless --audit")
 
     from repro.launch.mesh import make_production_mesh
     mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))

@@ -233,6 +233,20 @@ def _args_key(args):
     return treedef, tuple(_leaf_key(l) for l in leaves)
 
 
+def abstract_args(key):
+    """Rebuild the abstract argument pytree a cache key was lowered under.
+
+    The key already carries everything needed — treedef + per-leaf
+    (shape, dtype, weak_type) — so a ``Compiled`` loaded from disk (whose
+    executable may not support introspection) can be re-lowered ON DEMAND
+    without the original concrete arrays (tracekit + ``Compiled.as_text``
+    degradation, ISSUE 8)."""
+    treedef, avals = key[4], key[5]
+    leaves = [jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+              for shape, dtype, _weak in avals]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
 def _count(name: str, n: int = 1) -> None:
     with _LOCK:
         _STATS[name] += n
@@ -356,8 +370,15 @@ def _save_disk(key, executable) -> bool:
 
 class Compiled:
     """Stage 3: an executable specialized to one (signature, avals) key.
-    Delegates everything else (``cost_analysis``, ``as_text``, ...) to the
-    underlying ``jax.stages.Compiled``."""
+
+    Introspection (``cost_analysis``/``as_text``/``memory_analysis``) is
+    explicit rather than pure delegation: a DESERIALIZED AOT executable
+    (``from_disk=True``) may not implement the analysis surface — instead
+    of raising ``AttributeError`` into tracekit or ``stats()`` consumers,
+    the methods degrade gracefully by re-lowering the entry on demand from
+    the cache key's abstract avals (``abstract_args``) and answering from
+    the fresh IR.  Everything else still delegates to the underlying
+    ``jax.stages.Compiled``."""
 
     def __init__(self, key, executable, from_disk: bool = False):
         self.key = key
@@ -370,13 +391,69 @@ class Compiled:
     def __getattr__(self, name):
         return getattr(self._executable, name)
 
+    def _relowered(self) -> "Lowered":
+        """Re-lower this entry from its key (cached in ``_LOWERED``); the
+        introspection fallback for executables that cannot answer."""
+        with _LOCK:
+            low = _LOWERED.get(self.key)
+            w = _WRAPPED.get(self.key[:4])
+        if low is not None:
+            return low
+        if w is None:
+            raise AttributeError(
+                f"stages.Compiled for entry {self.key[0]!r} was loaded "
+                "from disk and its executable supports no introspection; "
+                "re-lowering needs the Wrapped builder, which is not in "
+                "the cache — rebuild it (wrap/dispatch the entry once) "
+                "before auditing")
+        return w.lower(*abstract_args(self.key))
+
+    def _introspect(self, name: str):
+        try:
+            return getattr(self._executable, name)()
+        except Exception:
+            # deserialized executables can't always answer (jax-version /
+            # backend dependent) — degrade to the re-lowered IR, whose
+            # jax.stages.Lowered implements the same analysis surface
+            return getattr(self._relowered(), name)()
+
+    def cost_analysis(self) -> dict:
+        """XLA cost model for this executable, normalized to ONE dict
+        (some jax versions return a per-computation list)."""
+        return _cost_dict(self._introspect("cost_analysis"))
+
+    def as_text(self) -> str:
+        return self._introspect("as_text")
+
+    def memory_analysis(self):
+        """``None`` when the executable cannot answer — unlike
+        cost/IR there is no memory surface on a re-lowered
+        ``jax.stages.Lowered`` to degrade to."""
+        try:
+            return self._executable.memory_analysis()
+        except Exception:
+            return None
+
+
+def _cost_dict(cost) -> dict:
+    """Normalize a ``cost_analysis()`` result: jax returns a dict for
+    freshly-compiled executables but a list of per-computation dicts for
+    deserialized ones (and on some versions)."""
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost or {})
+
 
 class Lowered:
     """Stage 2: lowered-but-not-compiled IR for one key.  ``compile()``
-    consults the in-memory cache, then the AOT disk store, then XLA."""
+    consults the in-memory cache, then the AOT disk store, then XLA.
+    Carries the closed ``jaxpr`` captured at trace time — the substrate
+    tracekit's J-rules walk (a ``jax.stages.Lowered`` alone does not
+    expose it)."""
 
-    def __init__(self, key, lowered):
+    def __init__(self, key, lowered, jaxpr=None):
         self.key = key
+        self.jaxpr = jaxpr
         self._lowered = lowered
 
     def compile(self) -> Compiled:
@@ -431,7 +508,13 @@ class Wrapped:
         if low is not None:
             return low
         jitted = jax.jit(self.fn, **dict(self.jit_kwargs))
-        low = Lowered(key, jitted.lower(*args))
+        try:
+            # trace explicitly so the closed jaxpr is kept on the Lowered:
+            # tracekit's J-rules audit the jaxpr, not just the HLO text
+            traced = jitted.trace(*args)
+            low = Lowered(key, traced.lower(), jaxpr=traced.jaxpr)
+        except AttributeError:      # older jax: no .trace — lower directly
+            low = Lowered(key, jitted.lower(*args))
         with _LOCK:
             _LOWERED.setdefault(key, low)
             _STATS["lowerings"] += 1
@@ -521,33 +604,72 @@ def clear_memory_cache() -> None:
         _COMPILED.clear()
 
 
+# ------------------------------------------------------------- audit hooks --
+
+
+def lowered_keys() -> Tuple:
+    """Snapshot of every cache key lowered so far this process — tracekit's
+    J006 (retrace-surface leak) counts distinct aval signatures per
+    (entry, signature) over this set."""
+    with _LOCK:
+        return tuple(_LOWERED.keys())
+
+
+def compiled_for(wrapped: "Wrapped", *args) -> Compiled:
+    """The ``Compiled`` behind one (wrapped, args) dispatch — memory, then
+    disk, then lower+compile.  Benchmarks use this to read
+    ``cost_analysis`` off exactly the executable they just timed."""
+    key = wrapped._key(args)
+    with _LOCK:
+        comp = _COMPILED.get(key)
+    if comp is None:
+        comp = _load_disk(key)
+    if comp is None:
+        comp = wrapped.lower(*args).compile()
+    return comp
+
+
+def cost_of(wrapped: "Wrapped", *args) -> dict:
+    """Normalized cost columns for one dispatch: ``flops``,
+    ``bytes_accessed`` and (when the backend reports it) ``peak_bytes``.
+    Values are ``None`` when the executable cannot answer even after the
+    re-lowering fallback."""
+    comp = compiled_for(wrapped, *args)
+    try:
+        cost = comp.cost_analysis()
+    except Exception:
+        cost = {}
+    out = dict(flops=cost.get("flops"),
+               bytes_accessed=cost.get("bytes accessed"))
+    mem = comp.memory_analysis()
+    out["peak_bytes"] = None if mem is None \
+        else int(getattr(mem, "temp_size_in_bytes", 0))
+    return out
+
+
+def audit(cfg=None, **kw):
+    """Post-lowering static analysis over the staged artifacts — the
+    ``stages``-side front door to ``repro.analysis.tracekit``.  With a
+    config/signature it audits that fleet's dispatch set
+    (``tracekit.audit_fleet``); imported lazily so ``stages`` never
+    depends on the analysis package."""
+    from repro.analysis import tracekit
+    return tracekit.audit_fleet(cfg, **kw)
+
+
 # ------------------------------------------------------- fleet precompile ---
 
 
-def precompile_fleet(cfg, *, instances: Optional[int] = None,
-                     blocks: Optional[int] = None,
-                     queries: Optional[int] = None,
-                     analytics_num_rows: int = 0, analytics_k: int = 8,
-                     mesh=None, data_axes=None) -> dict:
-    """Compile a ``D4MConfig``'s whole dispatch set once, at launch.
-
-    Enumerates the production entry points a fleet run touches — the
-    instance-batched ingest step with telemetry (``launch/ingest``) and the
-    donated telemetry-free service variant, the service point-query and
-    top-k analytics dispatches, the single-instance ``hier``/``engine``
-    ops, and the sharded ingest/query programs when ``mesh``/``data_axes``
-    are given — and drives each through lower+compile against abstract
-    inputs.  With a warm persistent cache this is pure deserialization:
-    ``stats()["compiles"]`` stays 0 and a subsequent ``launch/ingest`` +
-    ``launch/query`` run performs ZERO compile events (the acceptance
-    criterion asserted in tests/test_stages.py).
-
-    ``instances``/``blocks``/``queries`` override the config's
-    ``instances_per_device``/``blocks_per_step``/``query_batch`` so a CLI
-    can precompile the exact shapes it is about to dispatch.  ``cfg`` may
-    also be an already-canonical ``Signature`` (the launch CLIs build one
-    from argparse knobs).  Returns ``{entry: "compiled"|"disk"|"cached"}``.
-    """
+def fleet_jobs(cfg, *, instances: Optional[int] = None,
+               blocks: Optional[int] = None,
+               queries: Optional[int] = None,
+               analytics_num_rows: int = 0, analytics_k: int = 8,
+               mesh=None, data_axes=None) -> list:
+    """Enumerate a config's production dispatch set as
+    ``[(entry, Wrapped, abstract_args), ...]`` — the shared job list behind
+    ``precompile_fleet`` (which compiles it) and
+    ``repro.analysis.tracekit`` (which audits the same artifacts, so the
+    audit set and the launch-warmup set can never drift apart)."""
     from repro.core import distributed, hier, stream
     from repro.core import semiring as sr_mod
     from repro.query import service
@@ -627,7 +749,39 @@ def precompile_fleet(cfg, *, instances: Optional[int] = None,
                          mesh, data_axes, sr, use_kernel=sig.use_kernel,
                          l0_mode=sig.l0_mode or "auto"),
                      (states_abs,) + q_abs))
+    return jobs
 
+
+def precompile_fleet(cfg, *, instances: Optional[int] = None,
+                     blocks: Optional[int] = None,
+                     queries: Optional[int] = None,
+                     analytics_num_rows: int = 0, analytics_k: int = 8,
+                     mesh=None, data_axes=None) -> dict:
+    """Compile a ``D4MConfig``'s whole dispatch set once, at launch.
+
+    Enumerates the production entry points a fleet run touches
+    (``fleet_jobs``) — the instance-batched ingest step with telemetry
+    (``launch/ingest``) and the donated telemetry-free service variant,
+    the service point-query and top-k analytics dispatches, the
+    single-instance ``hier``/``engine`` ops, and the sharded ingest/query
+    programs when ``mesh``/``data_axes`` are given — and drives each
+    through lower+compile against abstract inputs.  With a warm persistent
+    cache this is pure deserialization: ``stats()["compiles"]`` stays 0
+    and a subsequent ``launch/ingest`` + ``launch/query`` run performs
+    ZERO compile events (the acceptance criterion asserted in
+    tests/test_stages.py).
+
+    ``instances``/``blocks``/``queries`` override the config's
+    ``instances_per_device``/``blocks_per_step``/``query_batch`` so a CLI
+    can precompile the exact shapes it is about to dispatch.  ``cfg`` may
+    also be an already-canonical ``Signature`` (the launch CLIs build one
+    from argparse knobs).  Returns ``{entry: "compiled"|"disk"|"cached"}``.
+    """
+    jobs = fleet_jobs(cfg, instances=instances, blocks=blocks,
+                      queries=queries,
+                      analytics_num_rows=analytics_num_rows,
+                      analytics_k=analytics_k, mesh=mesh,
+                      data_axes=data_axes)
     report = {}
     for entry, wrapped, args in jobs:
         before = stats()

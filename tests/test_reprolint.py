@@ -47,6 +47,41 @@ def test_r001_decorator_and_partial_fire():
     assert len(vs) == 1
 
 
+def test_r001_pmap_fires():
+    """ISSUE 8 satellite: jax.pmap escaped the bare-jit rule — it compiles
+    exactly like jit and must route through stages too."""
+    vs = violations("""
+        import jax
+        step = jax.pmap(lambda x: x + 1, axis_name="d")
+        """, "R001")
+    assert len(vs) == 1 and "pmap" in vs[0].message
+
+
+def test_r001_pjit_fires():
+    vs = violations("""
+        from jax.experimental.pjit import pjit
+        f = pjit(lambda x: x)
+        """, "R001")
+    assert len(vs) == 1
+    vs = violations("""
+        import jax.experimental.pjit
+        f = jax.experimental.pjit.pjit(lambda x: x)
+        """, "R001")
+    assert len(vs) == 1
+
+
+def test_r001_nested_transform_alias_fires():
+    """jax.vmap(jax.jit(...)) — the jit call buried inside a transform
+    still compiles outside the stages cache."""
+    vs = violations("""
+        import jax
+        from jax import jit
+        batched = jax.vmap(jax.jit(lambda x: x + 1))
+        rebatched = jax.vmap(jit(lambda x: x * 2))
+        """, "R001")
+    assert len(vs) == 2
+
+
 def test_r001_good_twin_quiet():
     assert violations("""
         from repro import stages

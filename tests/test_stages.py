@@ -204,6 +204,53 @@ def test_persistence_round_trip(cache_dir):
         np.testing.assert_array_equal(w_q, c_q)     # bit-identical
 
 
+# ------------------------------------------- disk-loaded introspection ------
+
+
+def test_disk_loaded_executable_degrades_to_relowering(cache_dir):
+    """ISSUE 8 satellite: a DESERIALIZED AOT executable may not implement
+    cost_analysis()/as_text(); ``stages.Compiled`` must degrade by
+    re-lowering from the cache key's abstract avals instead of raising
+    ``AttributeError`` into tracekit or ``stats()`` consumers."""
+    sig = stages.signature_of(extra=(("test", "disk_introspect"),))
+    fn = lambda x: x * 3.0   # noqa: E731
+    x = jnp.arange(4, dtype=jnp.float32)
+    stages.wrap(fn, "test.disk_introspect", sig)(x)   # compile + persist
+
+    # simulated cold start: memory caches dropped, disk store kept; the
+    # entry is re-wrapped (factories run at startup) and served from disk
+    stages.clear_memory_cache()
+    stages.reset_stats()
+    w = stages.wrap(fn, "test.disk_introspect", sig)
+    comp = stages.compiled_for(w, x)
+    assert comp.from_disk and stages.stats()["compiles"] == 0
+
+    # worst case: the deserialized executable answers NOTHING — swap in an
+    # introspection-free stub and prove every analysis surface degrades
+    class _Opaque:
+        pass
+
+    comp._executable = _Opaque()
+    lowerings_before = stages.stats()["lowerings"]
+    cost = comp.cost_analysis()
+    assert float(cost.get("flops", 0)) > 0
+    assert "4xf32" in comp.as_text()    # the re-lowered StableHLO
+    assert comp.memory_analysis() is None   # no memory surface to degrade to
+    # one re-lowering serves both calls (cached under the same key)
+    assert stages.stats()["lowerings"] == lowerings_before + 1
+
+    # cost_of never raises on the same degraded executable either
+    out = stages.cost_of(w, x)
+    assert out["flops"] is not None and out["bytes_accessed"] is not None
+
+    # ... but if the Wrapped builder is ALSO gone, the failure is an
+    # informative AttributeError, not a bare delegation crash
+    stages.clear_memory_cache()
+    comp._executable = _Opaque()
+    with pytest.raises(AttributeError, match="rebuild it"):
+        comp.cost_analysis()
+
+
 # --------------------------------------------------- launch acceptance ------
 
 
