@@ -96,7 +96,8 @@ def main(report: Report | None = None, mode: str = "both",
             if cost.get("flops") and cost.get("bytes_accessed"):
                 ai = (f"; AI {cost['flops'] / cost['bytes_accessed']:.3f}"
                       " flop/B")
-            report.add(f"scaling_{name}_{n_inst}_instances", sec / blocks,
+            report.add(f"scaling_{name}_{n_inst}_instances",
+                       sec.scaled(1 / blocks),
                        f"{rate:,.0f} upd/s agg; overhead x{overhead:.2f}"
                        f"{ai}",
                        compile_seconds=sec.compile_s, cost=cost)

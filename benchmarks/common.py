@@ -13,6 +13,8 @@ import time
 
 import jax
 
+from repro.obs.metrics import Histogram
+
 
 class Timing(float):
     """Steady-state ``run_s`` (usable anywhere a float is), carrying the
@@ -20,13 +22,42 @@ class Timing(float):
     (repro/stages.py) pays lower+compile — or a cache deserialization when
     the persistent cache is warm — so the two columns answer different
     questions: ``compile_s`` is the cold-start cost the keyed AOT cache
-    amortizes away, ``run_s`` is the paper-rate steady state."""
+    amortizes away, ``run_s`` is the paper-rate steady state.
+
+    ``p50_s``/``p95_s``/``p99_s`` summarize the repeat distribution through
+    the SAME mergeable log-bucket histogram the live obs layer uses
+    (``repro.obs.metrics.Histogram``) — one percentile definition for
+    BENCH JSONs and runtime metrics.  ``run_s`` itself stays the exact
+    sample median so the committed trajectory is not perturbed by bucket
+    quantization."""
 
     compile_s = 0.0
+    p50_s = None
+    p95_s = None
+    p99_s = None
 
-    def __new__(cls, run_s: float, compile_s: float = 0.0):
+    def __new__(cls, run_s: float, compile_s: float = 0.0,
+                hist: Histogram | None = None):
         t = super().__new__(cls, run_s)
         t.compile_s = compile_s
+        if hist is not None and hist.count:
+            t.p50_s = hist.percentile(50)
+            t.p95_s = hist.percentile(95)
+            t.p99_s = hist.percentile(99)
+        return t
+
+    def scaled(self, k: float) -> "Timing":
+        """Per-unit view: run_s and the repeat percentiles scaled by ``k``
+        (e.g. a per-round time divided across blocks), compile_s kept
+        whole — the first-call cost is paid once, not per unit.  Plain
+        float arithmetic (``sec / blocks``) silently drops these
+        attributes; use this instead when a scaled row should keep its
+        columns."""
+        t = Timing(float(self) * k, self.compile_s)
+        for attr in ("p50_s", "p95_s", "p99_s"):
+            v = getattr(self, attr)
+            if v is not None:
+                setattr(t, attr, v * k)
         return t
 
 
@@ -41,12 +72,15 @@ def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> Timing:
     for _ in range(max(warmup - 1, 0)):
         jax.block_until_ready(fn(*args))
     times = []
+    hist = Histogram()
     for _ in range(iters):
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
-        times.append(time.perf_counter() - t0)
+        dt = time.perf_counter() - t0
+        times.append(dt)
+        hist.observe(dt)
     times.sort()
-    return Timing(times[len(times) // 2], compile_s)
+    return Timing(times[len(times) // 2], compile_s, hist=hist)
 
 
 class Report:
@@ -72,19 +106,26 @@ class Report:
         if compile_seconds is None:
             compile_seconds = getattr(seconds, "compile_s", None)
         cus = None if compile_seconds is None else compile_seconds * 1e6
+        # repeat-distribution percentiles off the shared obs histogram a
+        # timeit Timing carries (None for derived/scalar rows)
+        pcts = tuple(
+            None if getattr(seconds, attr, None) is None
+            else getattr(seconds, attr) * 1e6
+            for attr in ("p50_s", "p95_s", "p99_s"))
         cost = cost or {}
         flops, bytes_acc = cost.get("flops"), cost.get("bytes_accessed")
-        self.rows.append((name, seconds * 1e6, cus, flops, bytes_acc,
-                          derived))
+        self.rows.append((name, seconds * 1e6, cus) + pcts
+                         + (flops, bytes_acc, derived))
         ctxt = "" if cus is None else f"{cus:.1f}"
+        ptxt = ",".join("" if p is None else f"{p:.1f}" for p in pcts)
         ftxt = "" if flops is None else f"{flops:.6g}"
         btxt = "" if bytes_acc is None else f"{bytes_acc:.6g}"
-        print(f"{name},{seconds * 1e6:.1f},{ctxt},{ftxt},{btxt},{derived}",
-              flush=True)
+        print(f"{name},{seconds * 1e6:.1f},{ctxt},{ptxt},{ftxt},{btxt},"
+              f"{derived}", flush=True)
 
     def header(self):
-        print("name,us_per_call,compile_us,flops,bytes_accessed,derived",
-              flush=True)
+        print("name,us_per_call,compile_us,p50_us,p95_us,p99_us,flops,"
+              "bytes_accessed,derived", flush=True)
 
 
 def persist(tag: str, report: Report, derived: dict | None = None,
@@ -107,9 +148,10 @@ def persist(tag: str, report: Report, derived: dict | None = None,
         backend=jax.default_backend(),
         device_count=jax.device_count(),
         config=_jsonable(config or {}),
-        rows=[dict(name=n, us_per_call=us, compile_us=cus, flops=fl,
-                   bytes_accessed=ba, derived=d)
-              for n, us, cus, fl, ba, d in report.rows],
+        rows=[dict(name=n, us_per_call=us, compile_us=cus, p50_us=p50,
+                   p95_us=p95, p99_us=p99, flops=fl, bytes_accessed=ba,
+                   derived=d)
+              for n, us, cus, p50, p95, p99, fl, ba, d in report.rows],
         derived=_jsonable(derived or {}),
     )
     path = os.path.join(out_dir, f"BENCH_{tag}.json")

@@ -12,7 +12,9 @@ Walks the paper's core objects:
      batched point lookups, row extraction, degrees and heavy hitters,
      all without flushing or merging the layers;
   5. swap the semiring (max.plus) to reuse the same machinery for
-     "latest-timestamp" semantics.
+     "latest-timestamp" semantics;
+  6. watch the fleet: one device-side metrics snapshot + the obs event
+     stream that `launch/monitor` aggregates across processes.
 """
 import jax
 import jax.numpy as jnp
@@ -77,3 +79,29 @@ A_latest, _ = assoc.from_coo(src, dst, ts, capacity=16,
                              sr=semiring.MAX_PLUS)
 print("\nlatest-timestamp array (max.plus):\n",
       assoc.to_dense(A_latest, 4, 4, sr=semiring.MAX_PLUS))
+
+# --- 6. observe the fleet (repro/obs + launch/monitor) ----------------------
+# obs.enable() (or REPRO_OBS=1, or --obs on the launch CLIs) streams every
+# jit dispatch plus fleet samples as JSONL; metrics_snapshot reduces the
+# whole hierarchy to a handful of scalars in ONE audited dispatch — nnz,
+# occupancy, spills, depth, and the exact 64-bit update counter.
+import tempfile
+
+from repro import obs
+from repro.launch import monitor
+
+obs_dir = tempfile.mkdtemp(prefix="obs-quickstart-")
+obs.enable(obs_dir)
+sample = obs.metrics.fleet_sample(h)            # the hierarchy from step 3
+obs.emit("fleet", **sample)
+print(f"\nfleet sample: {sample['updates']} exact updates, "
+      f"nnz/layer={sample['nnz']}, occupancy="
+      f"{[f'{o:.0%}' for o in sample['occupancy']]}")
+obs.disable()
+# launch/monitor aggregates any number of processes' obs.jsonl files —
+# here just this one — into a dashboard + OBS_SUMMARY.json (in a real
+# fleet: launch/ingest --obs & launch/query --obs into one --obs-dir,
+# then `python -m repro.launch.monitor --follow`)
+summary = monitor.main(["--once", "--obs-dir", obs_dir])
+print(f"monitor saw {summary['records']} records from "
+      f"{summary['sources']} source(s)")

@@ -130,6 +130,64 @@ def exact_update_count(h: HierAssoc) -> int:
     return int(lo.sum() + (hi.sum() << np.int64(32)))
 
 
+def metrics_snapshot(h: HierAssoc) -> dict:
+    """Fleet observability sample: the whole ``[I, …]`` (or single) state
+    reduced to a handful of scalars/vectors in ONE dispatch.
+
+    Everything is computed on device — per-layer nnz totals and mean
+    occupancy, cumulative spills, overflow, a depth histogram (instances
+    per deepest-non-empty layer; bin 0 = empty), and the exact update
+    counter as (hi, lo) words (uint32 prefix-sum wrap detection, same
+    carry discipline as ``_bump_counter`` — no int64, J005-clean).  The
+    host transfer happens in the caller (``obs.metrics.fleet_sample``)
+    at the sampling boundary, never via a callback inside traced code
+    (J004).  Knob-free by construction: the signature pins geometry only,
+    so every semiring/fused/lazy variant of a fleet shares one compiled
+    snapshot program.
+    """
+    sig = stages.signature_for_state(h)
+    return metrics_snapshot_wrapped(sig)(h)
+
+
+def metrics_snapshot_wrapped(sig: stages.Signature) -> stages.Wrapped:
+    """Keyed snapshot program for one hierarchy geometry — registered in
+    ``stages.fleet_jobs`` so tracekit audits/budgets it like any
+    production entry."""
+    def run(h):
+        return _metrics_snapshot_body(h)
+
+    return stages.wrap(run, "hier.metrics_snapshot", sig)
+
+
+def _metrics_snapshot_body(h: HierAssoc) -> dict:
+    num_layers = h.num_layers
+    nnz = [l.nnz for l in h.layers]          # each [I, ...] or scalar
+    nnz_total = jnp.stack([jnp.sum(n).astype(jnp.int32) for n in nnz])
+    occupancy = jnp.stack([jnp.mean(n.astype(jnp.float32)) / c
+                           for n, c in zip(nnz, h.capacities)])
+    # per-instance depth: 1 + deepest layer holding data (0 = empty)
+    depth = jnp.zeros(jnp.shape(nnz[0]), jnp.int32)
+    for i, n in enumerate(nnz):
+        depth = jnp.where(n > 0, jnp.int32(i + 1), depth)
+    depth_hist = jnp.zeros((num_layers + 1,), jnp.int32) \
+        .at[jnp.reshape(depth, (-1,))].add(1)
+    spills = jnp.sum(jnp.reshape(h.spills, (-1, len(h.cuts))), axis=0)
+    # exact fleet update total without int64: uint32 prefix sum of the low
+    # words wraps at most once per step, and each wrap is one 2**32 carry
+    lo = jnp.reshape(h.n_updates, (-1,))
+    csum = jnp.cumsum(lo)
+    carries = jnp.sum((csum[1:] < csum[:-1]).astype(jnp.int32))
+    return dict(
+        nnz=nnz_total,
+        occupancy=occupancy,
+        depth_hist=depth_hist,
+        spills=spills,
+        overflow=jnp.sum(h.overflow).astype(jnp.int32),
+        updates_lo=csum[-1],
+        updates_hi=jnp.sum(h.n_updates_hi).astype(jnp.int32) + carries,
+    )
+
+
 def _merge(a, b, cap, sr, use_kernel):
     if use_kernel:
         return assoc.merge_kernel(a, b, cap, sr)

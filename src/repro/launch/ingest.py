@@ -47,6 +47,10 @@ def run(args) -> dict:
                               use_kernel=use_kernel, batch_mode=batch_mode)
     if getattr(args, "stages_cache", ""):
         stages.set_cache_dir(args.stages_cache)
+    obs_on = getattr(args, "obs", False)
+    if obs_on:
+        from repro import obs
+        obs.enable(getattr(args, "obs_dir", None) or None)
     blocks_per_round = max(args.blocks // args.rounds, 1)
     if getattr(args, "precompile", False):
         report = stages.precompile_fleet(
@@ -71,6 +75,14 @@ def run(args) -> dict:
     total_updates = 0
     wall = 0.0
     spill_counts = None
+    if obs_on:
+        from repro.obs import metrics as obs_metrics
+        from repro.obs import trace as obs_trace
+        # baseline fleet sample BEFORE the stream: the monitor's rate is
+        # the exact device-counter delta over the summed round walls, the
+        # same number this CLI prints (counter/wall agreement < 1% is the
+        # tentpole acceptance test)
+        obs_trace.emit("fleet", **obs_metrics.fleet_sample(states))
     for rnd in range(start_round, args.rounds):
         rkey = jax.random.fold_in(key, rnd)
         rows, cols, vals = instance_streams(
@@ -84,6 +96,12 @@ def run(args) -> dict:
         n = args.instances * blocks_per_round * args.block_size
         total_updates += n
         spill_counts = telem["spills"][:, -1]     # final cumulative spills
+        if obs_on:
+            # sampling boundary: one ingest_round span + ONE snapshot
+            # dispatch, both outside the timed region
+            obs_trace.emit("ingest_round", round=rnd, updates=n,
+                           wall_s=dt, rate=n / dt)
+            obs_trace.emit("fleet", **obs_metrics.fleet_sample(states))
         if args.verbose:
             print(f"round {rnd}: {n/dt:,.0f} updates/s "
                   f"(total {total_updates:,})")
@@ -101,12 +119,17 @@ def run(args) -> dict:
     frac_fast = 1.0 - spills_l0 / max(args.instances * n_updates_total, 1)
     rate = total_updates / wall if wall else 0.0
     from repro.core.hier import exact_update_count
-    return dict(updates_per_s=rate, total_updates=total_updates,
-                wall_s=wall, frac_blocks_layer0=frac_fast,
-                # exact 64-bit (hi, lo) reassembly — int32 summing broke
-                # past ~2.1e9 fleet updates (about one paper-second)
-                n_updates_counter=exact_update_count(states),
-                overflow=int(jnp.sum(states.overflow)))
+    out = dict(updates_per_s=rate, total_updates=total_updates,
+               wall_s=wall, frac_blocks_layer0=frac_fast,
+               # exact 64-bit (hi, lo) reassembly — int32 summing broke
+               # past ~2.1e9 fleet updates (about one paper-second)
+               n_updates_counter=exact_update_count(states),
+               overflow=int(jnp.sum(states.overflow)))
+    if obs_on:
+        obs_metrics.export_stages_gauges()
+        obs_trace.emit("metrics", **obs_metrics.REGISTRY.snapshot())
+        obs_trace.emit("run_summary", kind="ingest", **out)
+    return out
 
 
 def main():
@@ -151,6 +174,13 @@ def main():
     ap.add_argument("--precompile", action="store_true",
                     help="compile the whole dispatch set up front "
                     "(stages.precompile_fleet) before streaming")
+    ap.add_argument("--obs", action="store_true",
+                    help="emit obs.jsonl observability events "
+                    "(dispatch spans, per-round fleet samples); aggregate "
+                    "with python -m repro.launch.monitor")
+    ap.add_argument("--obs-dir", dest="obs_dir", default="",
+                    help="observability output directory (default 'obs' "
+                    "or REPRO_OBS_DIR)")
     args = ap.parse_args()
     out = run(args)
     print(f"sustained {out['updates_per_s']:,.0f} updates/s over "

@@ -34,6 +34,9 @@ def run(args) -> dict:
     cuts = tuple(int(c) for c in args.cuts.split(","))
     if getattr(args, "stages_cache", ""):
         stages.set_cache_dir(args.stages_cache)
+    if getattr(args, "obs", False):
+        from repro import obs
+        obs.enable(getattr(args, "obs_dir", None) or None)
     if getattr(args, "precompile", False):
         # run_service slices the stream into T//rounds blocks per round —
         # precompile against exactly that shape so the service loop's first
@@ -69,6 +72,7 @@ def run(args) -> dict:
         queries_per_round=args.queries_per_round,
         analytics_num_rows=0 if args.no_analytics else n_keys,
         analytics_k=args.top_k,
+        slo_p99_ms=getattr(args, "slo_p99_ms", None),
     )
     states = distributed.create_instances(
         args.instances, cuts, args.block_size)
@@ -76,12 +80,19 @@ def run(args) -> dict:
                                   with_queries=False, **kwargs)
     states = distributed.create_instances(
         args.instances, cuts, args.block_size)
-    _, stats = service.run_service(states, rows, cols, vals, q_rows, q_cols,
-                                   with_queries=True, **kwargs)
+    states, stats = service.run_service(states, rows, cols, vals,
+                                        q_rows, q_cols,
+                                        with_queries=True, **kwargs)
     stats["ingest_only_updates_per_s"] = base["updates_per_s"]
     stats["ingest_interference"] = (
         1.0 - stats["updates_per_s"] / base["updates_per_s"]
         if base["updates_per_s"] else 0.0)
+    if getattr(args, "obs", False):
+        from repro.obs import metrics as obs_metrics
+        from repro.obs import trace as obs_trace
+        obs_trace.emit("fleet", **obs_metrics.fleet_sample(states))
+        obs_metrics.export_stages_gauges()
+        obs_trace.emit("metrics", **obs_metrics.REGISTRY.snapshot())
     return stats
 
 
@@ -123,6 +134,17 @@ def main():
     ap.add_argument("--precompile", action="store_true",
                     help="compile the whole dispatch set up front "
                     "(stages.precompile_fleet) before serving")
+    ap.add_argument("--obs", action="store_true",
+                    help="emit obs.jsonl observability events; aggregate "
+                    "with python -m repro.launch.monitor")
+    ap.add_argument("--obs-dir", dest="obs_dir", default="",
+                    help="observability output directory (default 'obs' "
+                    "or REPRO_OBS_DIR)")
+    ap.add_argument("--slo-p99-ms", dest="slo_p99_ms", type=float,
+                    default=None,
+                    help="query-batch latency SLO target: breaches are "
+                    "counted (and emitted as obs events) per batch, and "
+                    "slo_attainment lands in the stats")
     args = ap.parse_args()
     out = run(args)
     print(f"ingest  {out['updates_per_s']:,.0f} upd/s "
@@ -130,8 +152,14 @@ def main():
           f"interference {out['ingest_interference']:+.1%})")
     print(f"queries {out['queries_per_s']:,.0f} q/s over "
           f"{out['n_queries']:,} lookups; "
-          f"p50 batch latency {out['latency_p50_s']*1e3:.2f} ms "
+          f"latency p50 {out['latency_p50_s']*1e3:.2f} / "
+          f"p95 {out['latency_p95_s']*1e3:.2f} / "
+          f"p99 {out['latency_p99_s']*1e3:.2f} ms "
           f"(max {out['latency_max_s']*1e3:.2f} ms)")
+    if out.get("slo_p99_ms") is not None:
+        print(f"SLO     p99 target {out['slo_p99_ms']:g} ms: "
+              f"attainment {out['slo_attainment']:.2%} "
+              f"({out['slo_breaches']} breaches)")
 
 
 if __name__ == "__main__":

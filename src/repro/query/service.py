@@ -27,6 +27,8 @@ from repro import stages
 from repro.core import semiring as sr_mod
 from repro.core import stream
 from repro.core.semiring import Semiring
+from repro.obs import slo as obs_slo
+from repro.obs import trace as obs_trace
 from repro.query import analytics, engine
 
 Array = jax.Array
@@ -87,7 +89,8 @@ def run_service(states, rows: Array, cols: Array, vals: Array,
                 l0_mode: str = "auto",
                 queries_per_round: int = 1,
                 analytics_num_rows: int = 0, analytics_k: int = 8,
-                with_queries: bool = True) -> Tuple[object, dict]:
+                with_queries: bool = True,
+                slo_p99_ms: float | None = None) -> Tuple[object, dict]:
     """Interleave ``rounds`` ingest rounds with query batches.
 
     ``rows``/``cols``/``vals`` are the full [I, T, B] stream (T must divide
@@ -96,6 +99,16 @@ def run_service(states, rows: Array, cols: Array, vals: Array,
     static).  ``with_queries=False`` runs the identical ingest schedule
     with no read path — the ingest-only baseline the <10% interference
     criterion compares against.  Returns (final states, stats dict).
+
+    Query-batch latency routes through the shared mergeable
+    ``obs.metrics`` histogram (one percentile implementation for the
+    service, benchmarks, and the monitor): ``latency_p50_s`` is now an
+    interpolated p50 and ``latency_p95_s``/``latency_p99_s`` ride
+    alongside; ``latency_max_s`` stays exact.  ``slo_p99_ms`` arms the
+    per-batch SLO check — ``slo_attainment``/``slo_breaches`` land in the
+    stats and each breach emits an ``slo_breach`` obs event when tracing
+    is enabled.  Ingest rounds run under a non-raising
+    ``obs.slo.StallDetector`` (``stalled_rounds``).
     """
     I, T, B = rows.shape
     if rounds < 2:
@@ -128,21 +141,24 @@ def run_service(states, rows: Array, cols: Array, vals: Array,
     ingest_wall = 0.0
     query_wall = 0.0          # point-lookup batches only
     analytics_wall = 0.0      # top-k batches, kept separate so queries/s
-    latencies = []            # is the point-lookup rate, not a blend
-    n_queries = 0
+    n_queries = 0             # is the point-lookup rate, not a blend
+    tracker = obs_slo.SLOTracker(target_p99_ms=slo_p99_ms, name="query")
+    stall = obs_slo.StallDetector(name="service.ingest")
     for rnd in range(1, rounds):
         sl = slice(rnd * per, (rnd + 1) * per)
         t0 = time.perf_counter()
         states = ingest(states, rows[:, sl], cols[:, sl], vals[:, sl])
         jax.block_until_ready(states)
-        ingest_wall += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        ingest_wall += dt
+        stall.observe(dt)
         if with_queries:
             for _ in range(queries_per_round):
                 t0 = time.perf_counter()
                 jax.block_until_ready(query(states, q_rows, q_cols))
                 dt = time.perf_counter() - t0
                 query_wall += dt
-                latencies.append(dt)
+                tracker.observe(dt)
                 n_queries += I * q_rows.shape[0]
             if analytic is not None:
                 t0 = time.perf_counter()
@@ -150,7 +166,7 @@ def run_service(states, rows: Array, cols: Array, vals: Array,
                 analytics_wall += time.perf_counter() - t0
     timed_rounds = rounds - 1
     n_updates = I * timed_rounds * per * B
-    latencies.sort()
+    hist = tracker.hist
     stats = dict(
         updates_per_s=n_updates / ingest_wall if ingest_wall else 0.0,
         queries_per_s=n_queries / query_wall if query_wall else 0.0,
@@ -159,8 +175,20 @@ def run_service(states, rows: Array, cols: Array, vals: Array,
         analytics_wall_s=analytics_wall,
         n_updates=n_updates,
         n_queries=n_queries,
-        latency_p50_s=latencies[len(latencies) // 2] if latencies else 0.0,
-        latency_max_s=latencies[-1] if latencies else 0.0,
+        # one-release aliases of the histogram percentiles (pre-obs names)
+        latency_p50_s=hist.percentile(50) if tracker.n else 0.0,
+        latency_p95_s=hist.percentile(95) if tracker.n else 0.0,
+        latency_p99_s=hist.percentile(99) if tracker.n else 0.0,
+        latency_max_s=hist.vmax if tracker.n else 0.0,
+        slo_p99_ms=slo_p99_ms,
+        slo_attainment=tracker.attainment(),
+        slo_breaches=tracker.breaches,
+        stalled_rounds=stall.stalls,
         rounds=timed_rounds,
     )
+    obs_trace.emit("service_summary", n_updates=n_updates,
+                   ingest_wall_s=ingest_wall, n_queries=n_queries,
+                   query_wall_s=query_wall,
+                   stalled_rounds=stall.stalls,
+                   slo=tracker.summary() if tracker.n else None)
     return states, stats

@@ -50,6 +50,8 @@ class StragglerMonitor:
         if slow:
             self.flagged += 1
             self.consecutive += 1
+            self._emit("straggler", dt,
+                       evict=self.consecutive >= self.evict_after)
             if self.consecutive >= self.evict_after:
                 raise StragglerEvicted(
                     f"step took {dt:.3f}s vs EMA {self.ema_s:.3f}s "
@@ -58,3 +60,14 @@ class StragglerMonitor:
             self.consecutive = 0
             self.ema_s = self.decay * self.ema_s + (1 - self.decay) * dt
         return slow
+
+    def _emit(self, ev: str, dt: float, **fields) -> None:
+        # observability is optional here: this module stays stdlib-only
+        # (importable without jax) unless tracing is actually armed
+        try:
+            from repro.obs import trace
+        except ImportError:
+            return
+        trace.emit(ev, step=self.steps, wall_s=round(dt, 6),
+                   ema_s=round(self.ema_s, 6),
+                   consecutive=self.consecutive, **fields)

@@ -46,6 +46,7 @@ import hashlib
 import os
 import pickle
 import threading
+import time
 from typing import Any, Callable, Optional, Tuple
 
 import jax
@@ -62,7 +63,28 @@ _LOWERED: dict = {}        # full key -> Lowered
 _COMPILED: dict = {}       # full key -> Compiled
 _STATS = dict(lowerings=0, compiles=0, memory_hits=0, disk_hits=0,
               dispatches=0, disk_writes=0)
+_ENTRY_STATS: dict = {}    # entry -> dict(dispatches=int, wall_s=float)
+_DIGESTS: dict = {}        # full key -> short signature digest (hook only)
 _CACHE_DIR: Optional[str] = None
+
+# Observability (repro.obs.trace) installs a per-dispatch hook + optional
+# jax.profiler annotation class here.  Both are HOST-side: they wrap the
+# already-compiled executable call and never participate in tracing, so
+# production jaxprs are bit-identical whether observability is on or off
+# and the off-path cost is one module-global read per dispatch.
+_TRACE_HOOK: Optional[Callable] = None
+_TRACE_ANNOTATION = None
+
+
+def set_trace_hook(hook: Optional[Callable], annotation=None) -> None:
+    """Install (or clear, with ``None``) the dispatch-span hook.  The hook
+    is called as ``hook(entry=, digest=, wall_s=, compile_s=, provenance=)``
+    after every concrete ``Wrapped`` dispatch; ``annotation``, when given,
+    is a context-manager class (``jax.profiler.TraceAnnotation``) nested
+    around the executable call."""
+    global _TRACE_HOOK, _TRACE_ANNOTATION
+    _TRACE_HOOK = hook
+    _TRACE_ANNOTATION = annotation if hook is not None else None
 
 
 # ------------------------------------------------------------ signatures ----
@@ -250,6 +272,27 @@ def abstract_args(key):
 def _count(name: str, n: int = 1) -> None:
     with _LOCK:
         _STATS[name] += n
+
+
+def _note_dispatch(entry: str, wall_s: float) -> None:
+    with _LOCK:
+        es = _ENTRY_STATS.get(entry)
+        if es is None:
+            es = _ENTRY_STATS[entry] = dict(dispatches=0, wall_s=0.0)
+        es["dispatches"] += 1
+        es["wall_s"] += wall_s
+
+
+def _key_digest(key) -> str:
+    """Short config-signature digest for trace spans; memoized because the
+    full ``_digest`` hashes the whole repr'd key on every call."""
+    with _LOCK:
+        d = _DIGESTS.get(key)
+    if d is None:
+        d = _digest(key)[:12]
+        with _LOCK:
+            _DIGESTS[key] = d
+    return d
 
 
 def _freeze(x):
@@ -524,16 +567,38 @@ class Wrapped:
         if is_tracing(args):
             return self.fn(*args)
         _count("dispatches")
+        t0 = time.perf_counter()
         key = self._key(args)
         with _LOCK:
             comp = _COMPILED.get(key)
+        provenance, compile_s = "memory", 0.0
         if comp is not None:
             _count("memory_hits")
-            return comp(*args)
-        comp = _load_disk(key)
-        if comp is None:
-            comp = self.lower(*args).compile()
-        return comp(*args)
+        else:
+            comp = _load_disk(key)
+            provenance = "disk"
+            if comp is None:
+                c0 = time.perf_counter()
+                comp = self.lower(*args).compile()
+                compile_s = time.perf_counter() - c0
+                provenance = "compile"
+        ann = _TRACE_ANNOTATION
+        if ann is not None:
+            with ann(self.entry):
+                out = comp(*args)
+        else:
+            out = comp(*args)
+        wall = time.perf_counter() - t0
+        _note_dispatch(self.entry, wall)
+        hook = _TRACE_HOOK
+        if hook is not None:
+            try:
+                hook(entry=self.entry, digest=_key_digest(key),
+                     wall_s=wall, compile_s=compile_s,
+                     provenance=provenance)
+            except Exception:
+                pass        # observability must never break the dispatch
+        return out
 
 
 def wrap(fn: Callable, entry: str, sig: Optional[Signature] = None, *,
@@ -577,13 +642,24 @@ def dispatch(entry: str, sig: Signature, make_fn: Callable[[], Callable],
 # ------------------------------------------------------------ bookkeeping ---
 
 
-def stats() -> dict:
+def stats(reset: bool = False) -> dict:
     """Compile-event counters: ``lowerings``/``compiles`` count actual
     staging work, ``memory_hits``/``disk_hits`` count cache service,
-    ``dispatches`` counts concrete calls through any ``Wrapped``."""
+    ``dispatches`` counts concrete calls through any ``Wrapped``.
+
+    ``per_entry`` breaks dispatches down by entry name with cumulative
+    dispatch wall seconds — the gauges ``obs.metrics.export_stages_gauges``
+    exports.  ``reset=True`` snapshots and zeroes the counters in ONE
+    locked step, so concurrent emitters never lose a count between the
+    read and the reset (tests/test_obs.py concurrent-emission test)."""
     with _LOCK:
         out = dict(_STATS)
         out["memory_entries"] = len(_COMPILED)
+        out["per_entry"] = {e: dict(v) for e, v in _ENTRY_STATS.items()}
+        if reset:
+            for k in _STATS:
+                _STATS[k] = 0
+            _ENTRY_STATS.clear()
     return out
 
 
@@ -591,6 +667,7 @@ def reset_stats() -> None:
     with _LOCK:
         for k in _STATS:
             _STATS[k] = 0
+        _ENTRY_STATS.clear()
 
 
 def clear_memory_cache() -> None:
@@ -736,6 +813,13 @@ def fleet_jobs(cfg, *, instances: Optional[int] = None,
                      dataclasses.replace(single_sig,
                                          l0_mode=sig.l0_mode or "auto")),
                  (h_abs,) + q_abs))
+    # fleet observability sample (obs.metrics.fleet_sample): knob-free —
+    # the snapshot reads counters/occupancy only, so its signature pins
+    # geometry alone and every (sr, fused, ...) variant shares one entry
+    jobs.append(("hier.metrics_snapshot",
+                 hier.metrics_snapshot_wrapped(
+                     signature_of(cuts=cuts, block_size=B, dtype=dtype)),
+                 (states_abs,)))
     if mesh is not None:
         jobs.append(("distributed.sharded_ingest_fn",
                      distributed.sharded_ingest_fn(

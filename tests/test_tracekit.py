@@ -197,7 +197,10 @@ def test_compare_budgets_verdicts():
 FLEET_ENTRIES = {"stream.ingest_instances", "service.ingest",
                  "service.point_query", "service.analytics", "hier.update",
                  "hier.flush", "hier.query_all",
-                 "query.engine.point_lookup"}
+                 "query.engine.point_lookup",
+                 # the observability sample is a production dispatch too:
+                 # audited + budgeted like every other fleet entry (ISSUE 9)
+                 "hier.metrics_snapshot"}
 
 
 def test_fleet_is_audit_clean():
