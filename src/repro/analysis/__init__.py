@@ -4,30 +4,41 @@ Every correctness incident in this repo's history was a violation of an
 unwritten, mechanically checkable contract: the vmapped ``lax.switch``
 executing all branches (PR 3), the dirty-sentinel-tail reductions (PR 5),
 the bare-jit retrace sprawl (PR 6).  This package writes those contracts
-down and enforces them twice:
+down and enforces them at every level a program exists at — source, then
+jaxpr/HLO, then the kernels themselves, plus an opt-in runtime net:
 
-- ``repro.analysis.lint`` (**reprolint**): an AST lint, stdlib-``ast``
-  only, run as ``python -m repro.analysis.lint src/``.  Rules R001-R005
-  encode the jit-front-door and canonical-form contracts at the source
-  level.  Import is jax-free so CI can lint without touching the
-  accelerator stack.
-- ``repro.analysis.contracts``: a ``jax.experimental.checkify`` runtime
-  sanitizer (``check_canonical`` / ``check_counter`` / ``check_plan``)
-  threaded into the ingest/query paths behind ``REPRO_CHECK=1``.  Off by
-  default and staged out to literally zero cost: the instrumented
-  programs key separate ``stages`` cache entries, so production keys
-  never see a check.
-- ``repro.analysis.tracekit`` (ISSUE 8): the post-lowering layer — rules
-  J001-J006 walked over the jaxpr/HLO artifacts ``repro.stages`` caches
-  for every fleet entry (x64 leaks, baked constants, unhonored donation,
-  host callbacks, int64 widening, retrace sprawl), plus per-entry
-  ``cost_analysis()`` FLOPs/bytes pinned as committed budgets in
-  ``COST_BUDGETS.json``.  Run as
-  ``python -m repro.analysis.tracekit --check``.
-- ``repro.analysis.baseline``: the shared accepted-debt machinery (allow
-  comments + committed baseline files) both analyzers build on, factored
-  out of ``lint`` so the two cannot drift.
+1. **source** — ``repro.analysis.lint`` (**reprolint**): an AST lint,
+   stdlib-``ast`` only, run as ``python -m repro.analysis.lint src/``.
+   Rules R001-R006 encode the jit-front-door, canonical-form and
+   kernel-universe contracts at the source level.  Import is jax-free so
+   CI can lint without touching the accelerator stack.
+2. **jaxpr/HLO** — ``repro.analysis.tracekit`` (ISSUE 8): the
+   post-lowering layer — rules J001-J006 walked over the artifacts
+   ``repro.stages`` caches for every fleet entry (x64 leaks, baked
+   constants, unhonored donation, host callbacks, int64 widening,
+   retrace sprawl), plus per-entry ``cost_analysis()`` FLOPs/bytes
+   pinned as committed budgets in ``COST_BUDGETS.json``.  Run as
+   ``python -m repro.analysis.tracekit --check``.
+3. **kernel** — ``repro.analysis.palkit`` (ISSUE 10): the Pallas layer —
+   rules K001-K006 introspect every ``pl.pallas_call`` in
+   ``repro.kernels.registry.jobs()`` (TPU tiling alignment, per-grid-step
+   VMEM footprint vs committed ``VMEM_BUDGETS.json``, index-map/pl.ds
+   bounds over the whole grid, output-revisit init discipline,
+   interpret-vs-Mosaic divergence surface, async-copy/semaphore
+   discipline).  Run as ``python -m repro.analysis.palkit --check``.
+   reprolint R006 closes the loop: a pallas_call outside the registry's
+   audit universe is itself a source-level violation.
+4. **runtime** — ``repro.analysis.contracts``: a
+   ``jax.experimental.checkify`` sanitizer (``check_canonical`` /
+   ``check_counter`` / ``check_plan``) threaded into the ingest/query
+   paths behind ``REPRO_CHECK=1``.  Off by default and staged out to
+   literally zero cost: the instrumented programs key separate
+   ``stages`` cache entries, so production keys never see a check.
 
-Do NOT import ``contracts`` or ``tracekit`` here: ``lint`` (and
-``baseline``) must stay importable without jax installed/initialized.
+``repro.analysis.baseline`` is the shared accepted-debt machinery (allow
+comments + committed baseline files) all three static analyzers build
+on, factored out of ``lint`` so they cannot drift.
+
+Do NOT import ``contracts``, ``tracekit`` or ``palkit`` here: ``lint``
+(and ``baseline``) must stay importable without jax installed.
 """

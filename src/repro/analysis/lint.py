@@ -32,6 +32,14 @@ R005  Raw-buffer reduction missing the ``sorted=False``/nnz gate (the
       ``sorted`` parameter and passes no ``sorted=`` kwarg — i.e. it
       trusts the sentinel tail, which is NOT part of the raw-buffer
       contract (see the CONTRACTS section of repro/core/assoc.py).
+R006  ``pl.pallas_call`` outside the audited kernel universe: every
+      Pallas kernel must live under ``repro/kernels/`` in a file listed
+      in ``kernels/registry.py``'s ``AUDITED_FILES`` — that is the set
+      ``repro.analysis.palkit`` statically audits (K001-K006, VMEM
+      budgets) and the equivalence tests pin against oracles.  A
+      pallas_call anywhere else ships un-audited BlockSpecs to hardware.
+      The registry tuple is read with stdlib ``ast`` (this lint stays
+      importable without jax).
 
 Suppression: append ``# reprolint: allow(R00x) <reason>`` to the line
 (or the line directly above, for wrapped statements).  A suppression
@@ -60,6 +68,8 @@ RULES = {
     "R003": "donated argument referenced after the donating call",
     "R004": "host-side escape inside traced code",
     "R005": "raw-buffer reduction without an nnz/sorted gate",
+    "R006": "pl.pallas_call outside the registry-audited kernel "
+            "universe",
 }
 
 DEFAULT_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
@@ -528,7 +538,68 @@ def _r005(f: _File) -> Iterable[Violation]:
                     "does not promise (PR 5 class)")
 
 
-_RULE_FNS = (_r001, _r002, _r003, _r004, _r005)
+_REGISTRY_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                              os.pardir, "kernels", "registry.py")
+_audited_cache: dict = {}
+
+
+def audited_kernel_files(registry_path: str = None):
+    """The ``AUDITED_FILES`` tuple from kernels/registry.py, read with
+    stdlib ast so this lint never imports jax.  Returns ``None`` when the
+    registry is absent or unparseable (R006 then only enforces the
+    *location* half of the rule)."""
+    path = os.path.abspath(registry_path or _REGISTRY_PATH)
+    if path in _audited_cache:
+        return _audited_cache[path]
+    files = None
+    try:
+        with open(path, encoding="utf-8") as fh:
+            tree = ast.parse(fh.read(), filename=path)
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Assign) \
+                    and any(isinstance(t, ast.Name)
+                            and t.id == "AUDITED_FILES"
+                            for t in node.targets) \
+                    and isinstance(node.value, (ast.Tuple, ast.List)):
+                vals = [e.value for e in node.value.elts
+                        if isinstance(e, ast.Constant)
+                        and isinstance(e.value, str)]
+                files = frozenset(vals)
+                break
+    except OSError:
+        pass
+    _audited_cache[path] = files
+    return files
+
+
+def _r006(f: _File) -> Iterable[Violation]:
+    refs = []
+    for node in ast.walk(f.tree):
+        if isinstance(node, ast.Attribute) and node.attr == "pallas_call":
+            refs.append(node)
+        elif isinstance(node, ast.ImportFrom) and node.module \
+                and "pallas" in node.module:
+            refs.extend(a for a in node.names if a.name == "pallas_call")
+    if not refs:
+        return
+    prefix = "repro/kernels/"
+    if f.norm.startswith(prefix):
+        rel = f.norm[len(prefix):]
+        audited = audited_kernel_files()
+        if audited is None or rel in audited:
+            return
+        why = (f"kernel file {rel!r} is not in kernels/registry.py's "
+               "AUDITED_FILES — palkit never audits it and no equivalence "
+               "job pins it against an oracle")
+    else:
+        why = ("pallas_call outside src/repro/kernels/ — kernels live in "
+               "the registry-audited universe (palkit K001-K006 + VMEM "
+               "budgets) or they ship unchecked BlockSpecs")
+    for node in refs:
+        yield Violation("R006", f.norm, node.lineno, f.scope_name(node), why)
+
+
+_RULE_FNS = (_r001, _r002, _r003, _r004, _r005, _r006)
 
 
 # ------------------------------------------------------------------ driver --

@@ -1,3 +1,30 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernel families for the paper's compute hot-spots.
+
+Each family is a package ``<name>/`` with three files:
+
+``<name>.py``   the Pallas kernels themselves (``pl.pallas_call`` lives
+                ONLY here — reprolint R006 rejects it anywhere else, and
+                only in files listed in ``registry.AUDITED_FILES``)
+``ops.py``      the jitted public wrapper: padding/canonicalization,
+                kernel-vs-reference dispatch, ``interpret`` defaulting
+                via ``registry.default_interpret()``
+``ref.py``      the pure-XLA oracle the kernel must match bit-for-bit
+                (up to the job's rtol) — tests and palkit jobs pin
+                against it
+
+Families:
+
+``hier_merge``    bitonic two-way / multi-way canonical-segment merge —
+                  the paper's layer-merge hot path
+``embedding_bag`` gather + weighted bag-sum over a stacked table
+``segment_agg``   tiled segment-sum with searchsorted tile offsets
+
+``registry.py`` enumerates one representative shape/dtype job per
+variant (``registry.jobs()``).  That list is the single source of truth
+for three consumers: ``repro.analysis.palkit`` statically audits every
+job's pallas_call (tiling, VMEM budgets, index-map bounds — K001-K006),
+tests/test_kernel_registry.py runs each against its ``ref.py`` oracle,
+and ``stages.kernel_jobs()`` exposes the same set for launch warmup.
+Keep this package a leaf: nothing here imports stages, analysis, or
+core.
+"""

@@ -35,6 +35,13 @@ def _bag_kernel(idx_ref, w_ref, row_ref, out_ref):
     out_ref[...] += w * row_ref[...].astype(out_ref.dtype)
 
 
+# The table-row index map reads the prefetched index array, so the block
+# choice is data-dependent; ops.embedding_bag clamps every index to
+# [0, V) before dispatch, which keeps the fetched row in bounds on both
+# backends.
+# palkit: allow(K005) kernel=embedding_bag.* wrapper clamps indices to [0, V) before dispatch
+
+
 def embedding_bag_pallas(table, indices, weights, *, interpret: bool = True):
     """table [V, D]; indices/weights [n_bags, bag_size] -> [n_bags, D] f32."""
     n_bags, bag_size = indices.shape
@@ -44,7 +51,11 @@ def embedding_bag_pallas(table, indices, weights, *, interpret: bool = True):
         num_scalar_prefetch=1,                       # indices -> SMEM
         grid=(n_bags, bag_size),
         in_specs=[
-            pl.BlockSpec((1, 1), lambda b, l, idx: (b, l)),      # weights
+            # one scalar per (b, l): SMEM, not a lane-padded VMEM tile
+            # (a (1, 1) VMEM block would be padded to a full 8x128 tile
+            # by Mosaic and double-buffered every grid step — palkit K001)
+            pl.BlockSpec((1, 1), lambda b, l, idx: (b, l),
+                         memory_space=pltpu.SMEM),               # weights
             pl.BlockSpec((1, d), lambda b, l, idx: (idx[b, l], 0)),  # row
         ],
         out_specs=pl.BlockSpec((1, d), lambda b, l, idx: (b, 0)),

@@ -12,6 +12,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import registry
 from repro.kernels.embedding_bag import ref
 from repro.kernels.embedding_bag.embedding_bag import embedding_bag_pallas
 
@@ -37,7 +38,7 @@ def embedding_bag(table, indices, weights=None, mask=None, *,
 
     if use_kernel:
         if interpret is None:
-            interpret = jax.default_backend() != "tpu"
+            interpret = registry.default_interpret()
         out = embedding_bag_pallas(table, indices, weights,
                                    interpret=interpret)
     else:

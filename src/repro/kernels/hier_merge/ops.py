@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import registry
 from repro.kernels.hier_merge import ref
 from repro.kernels.hier_merge.hier_merge import (SENTINEL, merge_multi_pallas,
                                                  merge_pallas)
@@ -76,7 +77,7 @@ def merge(hi_a, lo_a, val_a, hi_b, lo_b, val_b, *, out_capacity: int,
 
     if use_kernel and n <= MAX_KERNEL_CAPACITY:
         if interpret is None:
-            interpret = jax.default_backend() != "tpu"
+            interpret = registry.default_interpret()
         # pad the B side; sentinel tail keeps it canonical
         hi_b2, lo_b2, val_b2 = _pad_canonical(
             hi_b, lo_b, val_b, n - hi_a.shape[0], zero)
@@ -111,7 +112,7 @@ def merge_multi(block_hi, block_lo, block_val, *run_arrays,
 
     if use_kernel and padded <= MAX_KERNEL_CAPACITY:
         if interpret is None:
-            interpret = jax.default_backend() != "tpu"
+            interpret = registry.default_interpret()
         cum = _next_pow2(max(block_hi.shape[0], 1))
         # SENTINEL padding is canonical: sorted runs stay sorted, and the
         # unsorted block's sentinels are just more keys for the first sort.

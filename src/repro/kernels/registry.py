@@ -1,0 +1,246 @@
+"""Kernel registry — ONE job list for every Pallas kernel family.
+
+Each ``KernelJob`` names a kernel entry point with a representative
+shape/dtype configuration, a deterministic concrete-input maker, and the
+reference oracle the kernel is pinned against.  Three consumers share this
+list so the audit universe cannot drift from the test universe:
+
+- ``repro.analysis.palkit`` traces every job's ``pallas_call``
+  configuration (BlockSpecs, grid, index maps, scratch) and audits it
+  against the K001-K006 rules + the committed ``VMEM_BUDGETS.json`` —
+  the kernel-level analysis layer (the same pattern as
+  ``stages.fleet_jobs`` feeding both ``precompile_fleet`` and tracekit);
+- ``tests/test_kernel_registry.py`` runs every job in interpret mode and
+  asserts bit/allclose equivalence against its oracle;
+- a future real-TPU campaign (ROADMAP item 4) warms up and validates
+  exactly this set on hardware before serving traffic.
+
+``AUDITED_FILES`` is the committed list of kernel source files that may
+call ``pl.pallas_call``; reprolint R006 parses this literal (stdlib-ast,
+no jax import) and fails any pallas_call outside ``src/repro/kernels/``
+or in a kernels file missing from this tuple — the audit universe is
+complete by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Tuple
+
+import jax
+import numpy as np
+
+# Kernel source files (relative to this package) allowed to call
+# pl.pallas_call.  reprolint R006 reads this literal via ast.parse; keep
+# it a plain tuple of plain strings.
+AUDITED_FILES = (
+    "hier_merge/hier_merge.py",
+    "embedding_bag/embedding_bag.py",
+    "segment_agg/segment_agg.py",
+)
+
+
+def default_interpret() -> bool:
+    """The shared ``interpret=None`` resolution for every kernels/*/ops.py
+    wrapper: run the Mosaic path only on a real TPU backend, interpret
+    everywhere else.  ONE place to change when a new backend gate (e.g.
+    a GPU Triton lowering) lands."""
+    return jax.default_backend() != "tpu"
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelJob:
+    """One audited kernel configuration.
+
+    ``fn`` is the raw Pallas wrapper (accepts ``interpret=``); ``make_inputs``
+    builds deterministic concrete operands for a seed; ``oracle`` computes the
+    reference outputs on the same operands.  ``audit_only`` marks jobs traced
+    by the audit (shape/VMEM rows) but too large to execute in interpret-mode
+    CI — the TPU campaign runs them on hardware instead."""
+    name: str
+    family: str
+    fn: Callable
+    make_inputs: Callable[[int], tuple]
+    oracle: Callable
+    rtol: float = 1e-5
+    audit_only: bool = False
+
+
+SENTINEL = np.int32(np.iinfo(np.int32).max)
+
+_NP_COMBINE = {"plus.times": np.add, "max.plus": np.maximum,
+               "min.plus": np.minimum}
+
+
+def _np_zero(sr_name: str, dtype) -> np.ndarray:
+    if sr_name == "plus.times":
+        return np.zeros((), dtype)
+    inf = (np.iinfo(dtype).max if np.issubdtype(dtype, np.integer)
+           else np.asarray(np.inf, dtype))
+    ninf = (np.iinfo(dtype).min if np.issubdtype(dtype, np.integer)
+            else np.asarray(-np.inf, dtype))
+    return np.asarray(ninf if sr_name.startswith("max") else inf, dtype)
+
+
+def _canonical_segment(rng, cap: int, nkeys: int, dtype,
+                       sr_name: str) -> tuple:
+    """A random canonical segment: sorted unique (hi, lo) keys combined
+    under the semiring, sentinel-padded to ``cap``.  numpy-only so the
+    registry never imports the core package (kernels stay a leaf)."""
+    n = cap // 2
+    hi = rng.integers(0, nkeys, n).astype(np.int64)
+    lo = rng.integers(0, nkeys, n).astype(np.int64)
+    val = (rng.integers(-100, 100, n).astype(dtype)
+           if np.issubdtype(np.dtype(dtype), np.integer)
+           else rng.normal(size=n).astype(dtype))
+    key = hi * nkeys + lo
+    uniq, inv = np.unique(key, return_inverse=True)
+    zero = _np_zero(sr_name, np.dtype(dtype))
+    acc = np.full(uniq.shape[0], zero, dtype)
+    _NP_COMBINE[sr_name].at(acc, inv, val)
+    out_hi = np.full((cap,), SENTINEL, np.int32)
+    out_lo = np.full((cap,), SENTINEL, np.int32)
+    out_val = np.full((cap,), zero, dtype)
+    m = uniq.shape[0]
+    out_hi[:m] = (uniq // nkeys).astype(np.int32)
+    out_lo[:m] = (uniq % nkeys).astype(np.int32)
+    out_val[:m] = acc
+    return out_hi, out_lo, out_val
+
+
+def _merge_inputs(cap_a: int, cap_b: int, nkeys: int, dtype, sr_name: str):
+    def make(seed: int) -> tuple:
+        rng = np.random.default_rng(seed)
+        a = _canonical_segment(rng, cap_a, nkeys, dtype, sr_name)
+        b = _canonical_segment(rng, cap_b, nkeys, dtype, sr_name)
+        return a + b
+    return make
+
+
+def _merge_multi_inputs(block: int, run_caps: Tuple[int, ...], nkeys: int,
+                        dtype, sr_name: str):
+    """Operands pre-padded the way ops.merge_multi pads them: block to a
+    power of two, then each run so every cumulative size stays one."""
+    def next_pow2(n):
+        return 1 << (n - 1).bit_length()
+
+    def make(seed: int) -> tuple:
+        rng = np.random.default_rng(seed)
+        zero = _np_zero(sr_name, np.dtype(dtype))
+        cum = next_pow2(max(block, 1))
+        bh = np.full((cum,), SENTINEL, np.int32)
+        bl = np.full((cum,), SENTINEL, np.int32)
+        bv = np.full((cum,), zero, dtype)
+        bh[:block] = rng.integers(0, nkeys, block)
+        bl[:block] = rng.integers(0, nkeys, block)
+        bv[:block] = rng.normal(size=block).astype(dtype)
+        runs = []
+        for cap in run_caps:
+            nxt = next_pow2(cum + cap)
+            seg = _canonical_segment(rng, nxt - cum, nkeys, dtype, sr_name)
+            runs.append(seg)
+            cum = nxt
+        return (bh, bl, bv, runs)
+    return make
+
+
+def _embedding_inputs(vocab: int, d: int, bags: int, bag: int):
+    def make(seed: int) -> tuple:
+        rng = np.random.default_rng(seed)
+        table = rng.normal(size=(vocab, d)).astype(np.float32)
+        idx = rng.integers(0, vocab, (bags, bag)).astype(np.int32)
+        w = rng.normal(size=(bags, bag)).astype(np.float32)
+        return table, idx, w
+    return make
+
+
+def _segment_inputs(e: int, d: int, num_tiles: int, tn: int, kb: int):
+    """Pre-sorted, block-padded operands exactly as ops.segment_sum stages
+    them (sort by segment, pad a full spare block, searchsorted starts)."""
+    def make(seed: int) -> tuple:
+        rng = np.random.default_rng(seed)
+        num_segments = num_tiles * tn
+        seg = np.sort(rng.integers(0, num_segments, e)).astype(np.int32)
+        msg = rng.normal(size=(e, d)).astype(np.float32)
+        e_pad = (e + kb - 1) // kb * kb + kb
+        seg_pad = np.concatenate(
+            [seg, np.full((e_pad - e,), num_segments, np.int32)])
+        msg_pad = np.concatenate(
+            [msg, np.zeros((e_pad - e, d), np.float32)])
+        boundaries = np.arange(num_tiles + 1, dtype=np.int32) * tn
+        starts = np.searchsorted(seg_pad, boundaries,
+                                 side="left").astype(np.int32)
+        return msg_pad, seg_pad, starts
+    return make
+
+
+def jobs() -> Tuple[KernelJob, ...]:
+    """The registry: every kernel family at representative shapes/dtypes.
+    Imports are local so importing this module (reprolint R006, CLIs) never
+    pulls the kernel implementations in."""
+    import functools
+
+    from repro.kernels.embedding_bag import ref as eb_ref
+    from repro.kernels.embedding_bag.embedding_bag import embedding_bag_pallas
+    from repro.kernels.hier_merge import ref as hm_ref
+    from repro.kernels.hier_merge.hier_merge import (merge_multi_pallas,
+                                                    merge_pallas)
+    from repro.kernels.segment_agg import ref as sa_ref
+    from repro.kernels.segment_agg.segment_agg import segment_sum_pallas
+
+    out = []
+
+    def merge_job(cap_a, cap_b, sr_name, dtype, *, audit_only=False,
+                  rtol=1e-4):
+        name = (f"hier_merge.merge_pallas/n{cap_a + cap_b}"
+                f".{sr_name}.{np.dtype(dtype).name}")
+        out.append(KernelJob(
+            name=name, family="hier_merge",
+            fn=functools.partial(merge_pallas, sr_name=sr_name),
+            make_inputs=_merge_inputs(cap_a, cap_b, 200, dtype, sr_name),
+            oracle=functools.partial(hm_ref.merge_ref, sr_name=sr_name),
+            rtol=rtol, audit_only=audit_only))
+
+    # the layer-0/1 hot-path sizes the cut schedule actually produces
+    merge_job(256, 256, "plus.times", np.float32)
+    merge_job(256, 256, "max.plus", np.float32)
+    merge_job(512, 512, "plus.times", np.int32)
+    # the supported kernel ceiling (ops.MAX_KERNEL_CAPACITY): traced for
+    # the VMEM budget row, executed only on real hardware
+    merge_job(1 << 15, 1 << 15, "plus.times", np.float32, audit_only=True)
+
+    def multi_fn(bh, bl, bv, runs, *, interpret):
+        return merge_multi_pallas((bh, bl, bv), runs,
+                                  sr_name="plus.times", interpret=interpret)
+
+    def multi_oracle(bh, bl, bv, runs):
+        return hm_ref.merge_multi_ref(
+            [bh] + [r[0] for r in runs], [bl] + [r[1] for r in runs],
+            [bv] + [r[2] for r in runs], sr_name="plus.times")
+
+    out.append(KernelJob(
+        name="hier_merge.merge_multi_pallas/n1024.k2",
+        family="hier_merge", fn=multi_fn,
+        make_inputs=_merge_multi_inputs(192, (256, 512), 300, np.float32,
+                                        "plus.times"),
+        oracle=multi_oracle, rtol=1e-4))
+
+    out.append(KernelJob(
+        name="embedding_bag.embedding_bag_pallas/v512.d128",
+        family="embedding_bag", fn=embedding_bag_pallas,
+        make_inputs=_embedding_inputs(512, 128, 16, 8),
+        oracle=eb_ref.embedding_bag_ref, rtol=2e-5))
+
+    def segment_fn(msg, seg, starts, *, interpret):
+        return segment_sum_pallas(msg, seg, starts, num_tiles=2,
+                                  tn=128, kb=128, interpret=interpret)
+
+    def segment_oracle(msg, seg, starts):
+        return sa_ref.segment_sum_ref(msg, seg, 256)
+
+    out.append(KernelJob(
+        name="segment_agg.segment_sum_pallas/t2.d128",
+        family="segment_agg", fn=segment_fn,
+        make_inputs=_segment_inputs(384, 128, 2, 128, 128),
+        oracle=segment_oracle, rtol=2e-5))
+
+    return tuple(out)

@@ -11,6 +11,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import registry
 from repro.kernels.segment_agg import ref
 from repro.kernels.segment_agg.segment_agg import segment_sum_pallas
 
@@ -35,7 +36,7 @@ def segment_sum(messages, seg_ids, *, num_segments: int, tn: int = 128,
         return ref.segment_sum_ref(messages, seg_ids, num_segments)[:num_segments]
 
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        interpret = registry.default_interpret()
 
     valid_cap = jnp.int32(num_segments)
     seg_clip = jnp.where((seg_ids >= 0) & (seg_ids < valid_cap),

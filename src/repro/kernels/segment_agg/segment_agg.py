@@ -27,6 +27,13 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+# The double-buffered HBM->VMEM fetch addresses seg/msg with pl.ds over
+# traced offsets; ops.segment_sum pads both to E_pad = ceil(E/KB)*KB + KB,
+# one full spare block past the last tile_starts entry, so every KB-wide
+# window a grid step can request stays in bounds on both backends.
+# palkit: allow(K005) kernel=segment_agg.* ops pads E to ceil(E/KB)*KB+KB so every ds window is in bounds
+
+
 def _segment_kernel(starts_ref,            # scalar prefetch [num_tiles+1]
                     seg_ref, msg_ref,      # ANY (HBM): [E_pad], [E_pad, D]
                     out_ref,               # VMEM block (TN, D)

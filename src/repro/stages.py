@@ -836,6 +836,17 @@ def fleet_jobs(cfg, *, instances: Optional[int] = None,
     return jobs
 
 
+def kernel_jobs() -> list:
+    """Enumerate the Pallas kernel families' representative jobs
+    (``repro.kernels.registry.jobs()``) — the kernel-level sibling of
+    ``fleet_jobs``: ``repro.analysis.palkit`` audits this list (K001-K006
+    + VMEM budgets), tests/test_kernel_registry.py checks each job
+    against its oracle, and a TPU launch can warm exactly the same set.
+    Imported lazily so ``stages`` never depends on the kernels package."""
+    from repro.kernels import registry
+    return registry.jobs()
+
+
 def precompile_fleet(cfg, *, instances: Optional[int] = None,
                      blocks: Optional[int] = None,
                      queries: Optional[int] = None,

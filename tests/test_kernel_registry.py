@@ -1,0 +1,71 @@
+"""Kernel registry (repro/kernels/registry.py) — the shared job list.
+
+Every runnable job executes in interpret mode against its ``ref.py``
+oracle — the same jobs palkit audits and a TPU campaign would warm, so
+the audited set and the tested set are one list by construction.
+Registry metadata invariants (unique names, AUDITED_FILES on disk,
+every family represented) keep that universe honest.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.kernels import registry
+
+JOBS = registry.jobs()
+RUNNABLE = [j for j in JOBS if not j.audit_only]
+
+
+def _assert_tree_close(got, want, rtol: float, name: str) -> None:
+    got_l = jax.tree_util.tree_leaves(got)
+    want_l = jax.tree_util.tree_leaves(want)
+    assert len(got_l) == len(want_l), name
+    for i, (g, w) in enumerate(zip(got_l, want_l)):
+        g, w = np.asarray(g), np.asarray(w)
+        assert g.shape == w.shape, (name, i, g.shape, w.shape)
+        if np.issubdtype(w.dtype, np.integer):
+            np.testing.assert_array_equal(g, w, err_msg=f"{name} leaf {i}")
+        else:
+            # semiring zeros are +/-inf for max/min families: compare the
+            # non-finite mask exactly, the finite values to rtol
+            finite = np.isfinite(w)
+            assert np.array_equal(np.isfinite(g), finite), (name, i)
+            assert np.array_equal(g[~finite], w[~finite]), (name, i)
+            np.testing.assert_allclose(g[finite], w[finite], rtol=rtol,
+                                       atol=rtol,
+                                       err_msg=f"{name} leaf {i}")
+
+
+@pytest.mark.parametrize("job", RUNNABLE, ids=lambda j: j.name)
+def test_job_matches_oracle(job):
+    ins = job.make_inputs(0)
+    got = job.fn(*ins, interpret=True)
+    want = job.oracle(*ins)
+    _assert_tree_close(got, want, job.rtol, job.name)
+
+
+def test_job_names_are_unique():
+    names = [j.name for j in JOBS]
+    assert len(names) == len(set(names))
+    # family/entry/config naming keeps budget keys greppable
+    assert all("/" in n and "." in n for n in names)
+
+
+def test_every_family_has_a_runnable_job():
+    assert {j.family for j in RUNNABLE} == {"hier_merge", "embedding_bag",
+                                            "segment_agg"}
+
+
+def test_audited_files_exist_and_cover_every_family():
+    pkg = os.path.dirname(registry.__file__)
+    for rel in registry.AUDITED_FILES:
+        assert os.path.isfile(os.path.join(pkg, rel)), rel
+    assert {rel.split("/")[0] for rel in registry.AUDITED_FILES} \
+        == {j.family for j in JOBS}
+
+
+def test_default_interpret_matches_backend():
+    # CI has no TPU: the shared interpret=None resolution must say so
+    assert registry.default_interpret() == (jax.default_backend() != "tpu")

@@ -252,6 +252,62 @@ def test_r005_nnz_gate_quiet():
         """, "R005") == []
 
 
+# ------------------------------------------------------------------- R006 --
+
+_PALLAS_SRC = """
+    import jax
+    from jax.experimental import pallas as pl
+
+    def run(x):
+        return pl.pallas_call(
+            lambda x_ref, o_ref: None,
+            out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype))(x)
+    """
+
+
+def test_r006_pallas_call_outside_kernels_fires():
+    vs = violations(_PALLAS_SRC, "R006", path="repro/core/hier.py")
+    assert len(vs) == 1 and "kernels" in vs[0].message
+
+
+def test_r006_unregistered_kernel_file_fires():
+    vs = violations(_PALLAS_SRC, "R006",
+                    path="repro/kernels/rogue/rogue.py")
+    assert len(vs) == 1 and "AUDITED_FILES" in vs[0].message
+
+
+def test_r006_registered_kernel_file_quiet():
+    assert violations(_PALLAS_SRC, "R006",
+                      path="repro/kernels/hier_merge/hier_merge.py") == []
+
+
+def test_r006_import_alias_fires():
+    vs = violations("""
+        from jax.experimental.pallas import pallas_call
+        """, "R006", path="repro/core/stream.py")
+    assert len(vs) == 1
+
+
+def test_r006_no_pallas_quiet():
+    assert violations("""
+        import jax.numpy as jnp
+
+        def f(x):
+            return jnp.sum(x)
+        """, "R006", path="repro/core/hier.py") == []
+
+
+def test_r006_registry_matches_committed_tuple():
+    files = lint.audited_kernel_files()
+    assert files == {"hier_merge/hier_merge.py",
+                     "embedding_bag/embedding_bag.py",
+                     "segment_agg/segment_agg.py"}
+    # a missing registry degrades to location-only enforcement, not a crash
+    assert lint.audited_kernel_files("/nonexistent/registry.py") is None
+    assert violations(_PALLAS_SRC, "R006",
+                      path="repro/core/hier.py")  # still fires outside
+
+
 # ------------------------------------------------------------ suppression --
 
 _BAD_JIT = "import jax\nstep = jax.jit(lambda x: x)"
